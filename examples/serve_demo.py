@@ -1,0 +1,27 @@
+"""Batched serving demo: continuous token-level batching (slots).
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import jax
+
+from repro.configs import get_smoke
+from repro.models import Model
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    cfg = get_smoke("gemma3-1b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, slots=4, max_len=64)
+
+    for rid in range(8):
+        engine.submit(Request(rid=rid, prompt=[1 + rid, 2, 3], max_new=8))
+    done = engine.run()
+    for req in sorted(done, key=lambda r: r.rid):
+        print(f"req {req.rid}: prompt={req.prompt} -> {req.generated}")
+    print(f"served {len(done)} requests on {engine.slots} slots")
+
+
+if __name__ == "__main__":
+    main()

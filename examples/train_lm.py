@@ -1,0 +1,28 @@
+"""End-to-end LM training example with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py            # ~3M smoke model
+    PYTHONPATH=src python examples/train_lm.py --large    # ~100M config
+
+Wraps the production driver (repro.launch.train): sharded state, data
+stream, jit'd step, periodic checkpoints; rerun the same command after a
+kill to resume from the last checkpoint.
+"""
+import subprocess
+import sys
+
+LARGE = ["--arch", "gemma3-1b", "--steps", "300", "--batch", "8",
+         "--seq", "512"]                       # ~1B full config
+SMOKE = ["--arch", "gemma3-1b", "--smoke", "--steps", "200",
+         "--batch", "8", "--seq", "64"]
+
+
+def main():
+    args = LARGE if "--large" in sys.argv else SMOKE
+    cmd = [sys.executable, "-m", "repro.launch.train", *args,
+           "--ckpt-dir", "/tmp/papas_train_lm", "--ckpt-every", "50"]
+    print("+", " ".join(cmd))
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

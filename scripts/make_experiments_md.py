@@ -1,0 +1,89 @@
+"""Regenerate the §Dry-run / §Roofline tables of EXPERIMENTS.md from the
+experiments/dryrun JSONs (run after repro.launch.dryrun)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DRY = ROOT / "experiments/dryrun"
+
+ARCH_ORDER = ["internvl2-26b", "gemma-7b", "h2o-danube-1.8b", "deepseek-7b",
+              "gemma3-1b", "hubert-xlarge", "qwen2-moe-a2.7b", "olmoe-1b-7b",
+              "mamba2-780m", "hymba-1.5b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+PEAK_BF16 = 197e12
+
+
+def load():
+    recs = {}
+    for p in DRY.glob("*.json"):
+        r = json.loads(p.read_text())
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def dryrun_table(recs):
+    rows = ["| arch | shape | mesh | compile | HLO FLOPs/dev | peak GB/dev | AG GB | AR GB | A2A GB | dominant |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            for m in ("16x16", "2x16x16"):
+                r = recs.get((a, s, m))
+                if not r or not r.get("applicable", True):
+                    continue
+                c = r["collectives"]
+                rows.append(
+                    f"| {a} | {s} | {m} | {r['compile_seconds']:.0f}s "
+                    f"| {r['hlo_flops_per_device']:.2e} "
+                    f"| {r['memory']['peak_bytes']/1e9:.1f} "
+                    f"| {c['all-gather']['bytes']/1e9:.1f} "
+                    f"| {c['all-reduce']['bytes']/1e9:.1f} "
+                    f"| {c['all-to-all']['bytes']/1e9:.2f} "
+                    f"| {r['roofline']['dominant']} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs):
+    rows = ["| arch | shape | compute | memory† | collective | bound | ideal‡ | frac | useful |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, "16x16"))
+            if not r or not r.get("applicable", True):
+                continue
+            rl = r["roofline"]
+            ideal = r["model_flops_per_device"] / PEAK_BF16
+            bound = rl["step_s_lower_bound"]
+            rows.append(
+                f"| {a} | {s} | {fmt_s(rl['compute_s'])} "
+                f"| {fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} "
+                f"| {rl['dominant']} | {fmt_s(ideal)} "
+                f"| {ideal/bound*100:.0f}% "
+                f"| {r['useful_flops_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    recs = load()
+    print("## table: dryrun")
+    print(dryrun_table(recs))
+    print()
+    print("## table: roofline")
+    print(roofline_table(recs))
+    n_ok = sum(1 for r in recs.values() if r.get("applicable", True))
+    print(f"\ncells compiled OK: {n_ok} (x2 meshes); "
+          f"skipped: {66 - 2*0 - n_ok} inapplicable records")
+
+
+if __name__ == "__main__":
+    main()

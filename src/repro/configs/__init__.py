@@ -1,0 +1,59 @@
+"""Assigned architecture registry: ``get(arch_id)`` / ``get_smoke(arch_id)``.
+
+Each module defines ``CONFIG`` (exact published numbers) and ``SMOKE``
+(same family, reduced dimensions — runs a CPU train step in tests).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "internvl2_26b",
+    "gemma_7b",
+    "h2o_danube_1_8b",
+    "deepseek_7b",
+    "gemma3_1b",
+    "hubert_xlarge",
+    "qwen2_moe_a2_7b",
+    "olmoe_1b_7b",
+    "mamba2_780m",
+    "hymba_1_5b",
+]
+
+#: CLI ids (dashes) → module names
+ALIASES = {
+    "internvl2-26b": "internvl2_26b",
+    "gemma-7b": "gemma_7b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "deepseek-7b": "deepseek_7b",
+    "gemma3-1b": "gemma3_1b",
+    "hubert-xlarge": "hubert_xlarge",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "mamba2-780m": "mamba2_780m",
+    "hymba-1.5b": "hymba_1_5b",
+}
+
+
+def _module(arch_id: str):
+    name = ALIASES.get(arch_id, arch_id.replace("-", "_").replace(".", "_"))
+    if name not in ARCH_IDS:
+        raise KeyError(f"unknown architecture {arch_id!r}; known: "
+                       f"{sorted(ALIASES)}")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get(arch_id: str, **overrides):
+    import dataclasses
+    cfg = _module(arch_id).CONFIG
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def get_smoke(arch_id: str, **overrides):
+    import dataclasses
+    cfg = _module(arch_id).SMOKE
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def all_archs() -> list[str]:
+    return list(ALIASES)

@@ -1,0 +1,39 @@
+"""PaPaS core: parameter-study, workflow, cluster, visualization engines."""
+from .dag import DAGError, TaskDAG, TaskNode
+from .executors import GangExecutor, GangStats, run_subprocess, stackable_key
+from .interpolate import InterpolationError, interpolate, render_command, substitute_content
+from .paramspace import ParameterSpace, combo_id, from_task
+from .provenance import StudyDB, config_hash
+from .scheduler import ScheduleEvent, Scheduler, TaskResult, dispatch_count, makespan
+from .staging import collect_outputs, stage_instance
+from .state import StudyJournal
+from .study import ParameterStudy, load_study
+from .viz import to_ascii, to_dot
+from .wdl import (
+    RESERVED_KEYWORDS,
+    StudySpec,
+    TaskSpec,
+    WDLError,
+    merge,
+    parse_dict,
+    parse_file,
+    parse_ini,
+    parse_json,
+    parse_range,
+    parse_yaml,
+)
+
+__all__ = [
+    "DAGError", "TaskDAG", "TaskNode",
+    "GangExecutor", "GangStats", "run_subprocess", "stackable_key",
+    "InterpolationError", "interpolate", "render_command", "substitute_content",
+    "ParameterSpace", "combo_id", "from_task",
+    "StudyDB", "config_hash",
+    "ScheduleEvent", "Scheduler", "TaskResult", "dispatch_count", "makespan",
+    "StudyJournal", "collect_outputs", "stage_instance",
+    "ParameterStudy", "load_study",
+    "to_ascii", "to_dot",
+    "RESERVED_KEYWORDS", "StudySpec", "TaskSpec", "WDLError", "merge",
+    "parse_dict", "parse_file", "parse_ini", "parse_json", "parse_range",
+    "parse_yaml",
+]

@@ -1,0 +1,107 @@
+"""``${...}`` value interpolation (paper §5).
+
+Supports intra-task references (``${keyword}``, ``${keyword:value}``) and
+inter-task references (``${task:keyword}``, ``${task:keyword:value}``),
+plus ``substitute`` partial-file-content rewriting where the keyword is a
+Python regular expression and the value list provides replacements.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Mapping
+
+_INTERP_RE = re.compile(r"\$\{([^}]+)\}")
+
+
+class InterpolationError(KeyError):
+    pass
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, float) and v.is_integer():
+        return str(int(v))
+    return str(v)
+
+
+def resolve(
+    path: str,
+    combo: Mapping[str, Any],
+    task: str | None = None,
+    studies: Mapping[str, Mapping[str, Any]] | None = None,
+) -> Any:
+    """Resolve one ``${path}`` reference.
+
+    Lookup order (paper: both entry levels, intra- then inter-task):
+      1. exact key in the current combination (``args:size``),
+      2. bare user keyword (``size`` matching unique ``*:size``),
+      3. task-qualified (``other_task:args:size``) against ``studies``.
+    """
+    if path in combo:
+        return combo[path]
+    tails = [k for k in combo if k.endswith(":" + path)]
+    if len(tails) == 1:
+        return combo[tails[0]]
+    if studies:
+        head, _, rest = path.partition(":")
+        if head in studies and rest:
+            other = studies[head]
+            if rest in other:
+                return other[rest]
+            tails = [k for k in other if k.endswith(":" + rest)]
+            if len(tails) == 1:
+                return other[tails[0]]
+    raise InterpolationError(f"cannot resolve ${{{path}}} (task={task!r})")
+
+
+def interpolate(
+    text: str,
+    combo: Mapping[str, Any],
+    task: str | None = None,
+    studies: Mapping[str, Mapping[str, Any]] | None = None,
+) -> str:
+    """Expand every ``${...}`` in ``text`` against a parameter combination."""
+
+    def _sub(m: re.Match[str]) -> str:
+        return _fmt(resolve(m.group(1), combo, task, studies))
+
+    prev, cur = None, text
+    # allow one level of nested results (a value containing ${...})
+    for _ in range(4):
+        if prev == cur:
+            break
+        prev, cur = cur, _INTERP_RE.sub(_sub, cur)
+    return cur
+
+
+def substitute_content(
+    content: str, rules: Mapping[str, Any]
+) -> str:
+    """Apply ``substitute`` rules to file content: each keyword is a
+    Python regex, each value the chosen replacement for this instance."""
+    out = content
+    for pattern, replacement in rules.items():
+        out = re.sub(pattern, _fmt(replacement), out)
+    return out
+
+
+def render_command(
+    command: str,
+    combo: Mapping[str, Any],
+    task: str | None = None,
+    studies: Mapping[str, Mapping[str, Any]] | None = None,
+) -> str:
+    """Render a task's command line for one workflow instance."""
+    return interpolate(command, combo, task, studies)
+
+
+def render_environ(
+    environ_keys: Mapping[str, Any],
+    combo: Mapping[str, Any],
+) -> dict[str, str]:
+    """Materialize the per-instance environment variable assignment."""
+    env: dict[str, str] = {}
+    for var in environ_keys:
+        key = f"environ:{var}"
+        if key in combo:
+            env[var] = _fmt(combo[key])
+    return env

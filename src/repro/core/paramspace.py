@@ -1,0 +1,133 @@
+"""Parameter combinatorics (paper §5.1).
+
+Every multi-valued parameter contributes a factor to the Cartesian
+product; ``fixed`` groups are zipped (bijection) and contribute a single
+factor; ``sampling`` selects a subset of the resulting combination space.
+
+The expansion is deterministic: parameters iterate in declaration order,
+row-major, with fixed groups hoisted to the outermost loops (matching the
+paper's "move fixed parameters into the outermost loop structures").
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import json
+import random
+from typing import Any, Iterator, Mapping, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class ParameterSpace:
+    """A declared parameter space: names → value lists, plus fixed groups."""
+
+    params: dict[str, list[Any]]
+    fixed: list[list[str]] = dataclasses.field(default_factory=list)
+    sampling: dict[str, Any] | None = None
+
+    def __post_init__(self) -> None:
+        seen: set[str] = set()
+        for group in self.fixed:
+            lens = {len(self.params[p]) for p in group}
+            if len(lens) > 1:
+                raise ValueError(
+                    f"fixed group {group} has mismatched lengths "
+                    f"{[len(self.params[p]) for p in group]}"
+                )
+            for p in group:
+                if p not in self.params:
+                    raise ValueError(f"fixed group references unknown parameter {p!r}")
+                if p in seen:
+                    raise ValueError(f"parameter {p!r} appears in multiple fixed groups")
+                seen.add(p)
+
+    # -- cardinality ----------------------------------------------------
+    def size(self) -> int:
+        """N_W = ∏ N_i with fixed groups counted once each."""
+        n = 1
+        grouped = {p for g in self.fixed for p in g}
+        for g in self.fixed:
+            n *= len(self.params[g[0]])
+        for name, values in self.params.items():
+            if name not in grouped:
+                n *= len(values)
+        return n
+
+    # -- enumeration ----------------------------------------------------
+    def _factors(self) -> list[tuple[tuple[str, ...], list[tuple[Any, ...]]]]:
+        """Ordered loop factors: fixed groups outermost, then free params."""
+        factors: list[tuple[tuple[str, ...], list[tuple[Any, ...]]]] = []
+        grouped = {p for g in self.fixed for p in g}
+        for g in self.fixed:
+            cols = [self.params[p] for p in g]
+            factors.append((tuple(g), list(zip(*cols))))
+        for name, values in self.params.items():
+            if name not in grouped:
+                factors.append(((name,), [(v,) for v in values]))
+        return factors
+
+    def combinations(self) -> Iterator[dict[str, Any]]:
+        """Yield every unique parameter combination (one per workflow)."""
+        factors = self._factors()
+        names: list[str] = [n for grp, _ in factors for n in grp]
+        for combo in itertools.product(*(vals for _, vals in factors)):
+            flat = tuple(v for tup in combo for v in tup)
+            yield dict(zip(names, flat))
+
+    def sample(self, seed: int | None = None) -> list[dict[str, Any]]:
+        """Apply the ``sampling`` keyword: subset of the combination space.
+
+        ``method: uniform`` takes every k-th combination to reach the
+        requested count; ``method: random`` draws without replacement.
+        ``count`` (int) or ``fraction`` (0..1] select the subset size.
+        """
+        combos = list(self.combinations())
+        if not self.sampling:
+            return combos
+        method = str(self.sampling.get("method", "uniform")).lower()
+        if "count" in self.sampling:
+            k = int(self.sampling["count"])
+        elif "fraction" in self.sampling:
+            k = max(1, int(round(float(self.sampling["fraction"]) * len(combos))))
+        else:
+            k = len(combos)
+        k = min(k, len(combos))
+        if method == "uniform":
+            if k == len(combos):
+                return combos
+            stride = len(combos) / k
+            return [combos[int(i * stride)] for i in range(k)]
+        if method == "random":
+            rng = random.Random(self.sampling.get("seed", seed if seed is not None else 0))
+            return rng.sample(combos, k)
+        raise ValueError(f"unknown sampling method {method!r}")
+
+
+def combo_id(combo: Mapping[str, Any]) -> str:
+    """Stable short identifier for a parameter combination (provenance)."""
+    blob = json.dumps({k: combo[k] for k in sorted(combo)}, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def from_task(params: Mapping[str, Sequence[Any]], fixed: Sequence[Sequence[str]],
+              sampling: Mapping[str, Any] | None = None) -> ParameterSpace:
+    """Build a space from TaskSpec.parameters() output, resolving bare
+    fixed names (``size`` → ``args:size``) to full parameter paths."""
+    resolved: list[list[str]] = []
+    for group in fixed:
+        rg: list[str] = []
+        for pname in group:
+            if pname in params:
+                rg.append(pname)
+            else:
+                matches = [k for k in params if k.endswith(":" + pname)]
+                if len(matches) != 1:
+                    raise ValueError(f"fixed parameter {pname!r} is unknown/ambiguous")
+                rg.append(matches[0])
+        resolved.append(rg)
+    return ParameterSpace(
+        params={k: list(v) for k, v in params.items()},
+        fixed=resolved,
+        sampling=dict(sampling) if sampling else None,
+    )

@@ -1,0 +1,93 @@
+"""Per-study provenance database (paper §4.1/§4.2).
+
+A study directory holds: the expanded configuration, one JSONL record per
+task attempt (status, runtime, metrics), and the study journal used for
+checkpoint/restart.  Plain files — no external DB — keeping the framework
+portable and user-space, as the paper requires.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from pathlib import Path
+from typing import Any, Iterator, Mapping
+
+
+def config_hash(obj: Any) -> str:
+    blob = json.dumps(obj, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+class StudyDB:
+    """Append-only provenance store for one parameter study."""
+
+    def __init__(self, root: str | Path, study: str) -> None:
+        self.dir = Path(root) / study
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.records_path = self.dir / "records.jsonl"
+        self.meta_path = self.dir / "study.json"
+
+    # -- study-level metadata -------------------------------------------
+    def write_meta(self, meta: Mapping[str, Any]) -> None:
+        tmp = self.meta_path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(dict(meta), indent=2, default=str))
+        os.replace(tmp, self.meta_path)
+
+    def read_meta(self) -> dict[str, Any]:
+        if not self.meta_path.exists():
+            return {}
+        return json.loads(self.meta_path.read_text())
+
+    # -- task records ----------------------------------------------------
+    def record(
+        self,
+        task_id: str,
+        status: str,
+        runtime: float,
+        combo: Mapping[str, Any] | None = None,
+        metrics: Mapping[str, Any] | None = None,
+        **extra: Any,
+    ) -> None:
+        rec = {
+            "task_id": task_id,
+            "status": status,
+            "runtime": runtime,
+            "combo": dict(combo) if combo else None,
+            "combo_hash": config_hash(combo) if combo else None,
+            "metrics": dict(metrics) if metrics else None,
+            "timestamp": time.time(),
+            **extra,
+        }
+        with self.records_path.open("a") as f:
+            f.write(json.dumps(rec, default=str) + "\n")
+
+    def records(self) -> Iterator[dict[str, Any]]:
+        if not self.records_path.exists():
+            return iter(())
+        def _it() -> Iterator[dict[str, Any]]:
+            with self.records_path.open() as f:
+                for line in f:
+                    line = line.strip()
+                    if line:
+                        yield json.loads(line)
+        return _it()
+
+    def completed_ids(self) -> set[str]:
+        return {r["task_id"] for r in self.records() if r["status"] == "ok"}
+
+    # -- profiler summary --------------------------------------------------
+    def runtime_summary(self) -> dict[str, Any]:
+        times = [r["runtime"] for r in self.records() if r["status"] == "ok"]
+        if not times:
+            return {"count": 0}
+        times.sort()
+        return {
+            "count": len(times),
+            "total": sum(times),
+            "min": times[0],
+            "median": times[len(times) // 2],
+            "max": times[-1],
+        }

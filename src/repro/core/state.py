@@ -1,0 +1,57 @@
+"""Study checkpoint/restart journal (paper §4.1).
+
+"PaPaS provides checkpoint-restart functionality in case of fault or a
+deliberate pause/stop operation.  A parameter study's state can be saved
+in a workflow file and reloaded at a later time."
+
+The journal is a JSON file: the study's expanded instance list plus the
+set of completed instance ids.  `resume()` rebuilds exactly the pending
+portion of the study.  Writes are atomic (tmp + rename) so a crash never
+corrupts the journal.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Any, Mapping
+
+
+class StudyJournal:
+    def __init__(self, path: str | Path) -> None:
+        self.path = Path(path)
+
+    def exists(self) -> bool:
+        return self.path.exists()
+
+    def save(
+        self,
+        instances: list[dict[str, Any]],
+        completed: set[str],
+        meta: Mapping[str, Any] | None = None,
+    ) -> None:
+        doc = {
+            "version": 1,
+            "instances": instances,
+            "completed": sorted(completed),
+            "meta": dict(meta or {}),
+        }
+        tmp = self.path.with_suffix(".tmp")
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        tmp.write_text(json.dumps(doc, default=str))
+        os.replace(tmp, self.path)
+
+    def load(self) -> tuple[list[dict[str, Any]], set[str], dict[str, Any]]:
+        doc = json.loads(self.path.read_text())
+        if doc.get("version") != 1:
+            raise ValueError(f"unsupported journal version {doc.get('version')!r}")
+        return doc["instances"], set(doc["completed"]), doc.get("meta", {})
+
+    def mark_complete(self, task_id: str) -> None:
+        """Incrementally record completion (cheap append-style update)."""
+        if self.path.exists():
+            instances, completed, meta = self.load()
+        else:
+            instances, completed, meta = [], set(), {}
+        completed.add(task_id)
+        self.save(instances, completed, meta)

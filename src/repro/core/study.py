@@ -1,0 +1,219 @@
+"""The Parameter Study engine (paper §4.1) — the top of the stack.
+
+A study is parsed from WDL (or built via the Python API), expanded into
+workflow instances (one per unique parameter combination, §5.1), compiled
+into a task DAG (tasks × instances), and executed through a chosen
+backend with provenance + checkpoint/restart.
+
+Semantics: the global parameter space is the product of every task's
+parameter space (parameters are task-namespaced as ``task/param``); a
+*workflow instance* is one combination applied across the whole task DAG,
+exactly the paper's "a workflow corresponds to an instance having a
+unique parameter combination".
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Mapping, Sequence
+
+from .interpolate import render_command, render_environ
+from .dag import TaskDAG, TaskNode
+from .executors import GangExecutor, run_subprocess, stackable_key
+from .paramspace import ParameterSpace, combo_id, from_task
+from .provenance import StudyDB
+from .scheduler import Scheduler, TaskResult
+from .state import StudyJournal
+from .wdl import StudySpec, TaskSpec, parse_file
+from .viz import to_ascii, to_dot
+
+#: registry type: task name → callable(combo: dict) -> Any
+TaskRegistry = Mapping[str, Callable[[dict[str, Any]], Any]]
+
+
+def _ns(task: str, pname: str) -> str:
+    return f"{task}/{pname}"
+
+
+def _strip_ns(combo: Mapping[str, Any], task: str) -> dict[str, Any]:
+    """Project the global combo onto one task's local parameter names."""
+    local: dict[str, Any] = {}
+    prefix = f"{task}/"
+    for key, value in combo.items():
+        if key.startswith(prefix):
+            local[key[len(prefix):]] = value
+    return local
+
+
+class ParameterStudy:
+    """Orchestrates expansion → DAG → scheduling → provenance."""
+
+    def __init__(
+        self,
+        spec: StudySpec,
+        registry: TaskRegistry | None = None,
+        root: str | Path = ".papas",
+        name: str | None = None,
+    ) -> None:
+        self.spec = spec
+        self.registry = dict(registry or {})
+        self.name = name or "_".join(spec.tasks)[:48]
+        self.db = StudyDB(root, self.name)
+        self.journal = StudyJournal(self.db.dir / "journal.json")
+
+    # -- expansion --------------------------------------------------------
+    def space(self) -> ParameterSpace:
+        params: dict[str, list[Any]] = {}
+        fixed: list[list[str]] = []
+        sampling: dict[str, Any] | None = None
+        for tname, task in self.spec.tasks.items():
+            tparams = task.parameters()
+            tspace = from_task(tparams, task.fixed, task.sampling)
+            for pname, values in tspace.params.items():
+                params[_ns(tname, pname)] = values
+            for group in tspace.fixed:
+                fixed.append([_ns(tname, p) for p in group])
+            if task.sampling and sampling is None:
+                sampling = dict(task.sampling)
+        return ParameterSpace(params=params, fixed=fixed, sampling=sampling)
+
+    def instances(self) -> list[dict[str, Any]]:
+        """All workflow instances (post-sampling), deterministic order."""
+        return self.space().sample()
+
+    # -- DAG construction ---------------------------------------------------
+    def build_dag(self, instances: Sequence[Mapping[str, Any]] | None = None
+                  ) -> TaskDAG:
+        dag = TaskDAG()
+        combos = list(instances) if instances is not None else self.instances()
+        for combo in combos:
+            cid = combo_id(combo)
+            for tname, task in self.spec.tasks.items():
+                node_id = f"{tname}@{cid}"
+                deps = [f"{d}@{cid}" for d in task.after]
+                local = _strip_ns(combo, tname)
+                dag.add(TaskNode(
+                    id=node_id, task=tname, combo=local, deps=deps,
+                    payload={"global_combo": dict(combo)}))
+        dag.validate()
+        return dag
+
+    # -- rendering ----------------------------------------------------------
+    def render_node(self, node: TaskNode) -> tuple[str | None, dict[str, str]]:
+        """Interpolate the command line and environment for one node."""
+        task = self.spec.tasks[node.task]
+        studies = {
+            other: _strip_ns(node.payload["global_combo"], other)
+            for other in self.spec.tasks
+        }
+        cmd = None
+        if task.command:
+            cmd = render_command(task.command, node.combo, node.task, studies)
+        env = render_environ(task.environ, node.combo)
+        return cmd, env
+
+    def visualize(self, fmt: str = "ascii",
+                  states: Mapping[str, str] | None = None) -> str:
+        dag = self.build_dag()
+        return to_dot(dag, states, self.name) if fmt == "dot" else to_ascii(dag, states)
+
+    # -- execution ------------------------------------------------------------
+    def _default_runner(self, node: TaskNode) -> Any:
+        if node.task in self.registry:
+            return self.registry[node.task](dict(node.combo))
+        cmd, env = self.render_node(node)
+        if cmd is None:
+            raise RuntimeError(
+                f"task {node.task!r} has no command and no registered callable")
+        return run_subprocess(cmd, env=env)
+
+    def run(
+        self,
+        slots: int = 1,
+        resume: bool = False,
+        runner: Callable[[TaskNode], Any] | None = None,
+        gang: GangExecutor | None = None,
+        max_retries: int = 1,
+    ) -> dict[str, TaskResult]:
+        """Execute the study.
+
+        ``resume=True`` reloads the journal and skips completed nodes
+        (checkpoint/restart).  ``gang`` switches to batched dispatch:
+        whole DAG levels are grouped and launched as single programs —
+        the paper's single-cluster-job technique.
+        """
+        instances = self.instances()
+        completed: set[str] = set()
+        if resume and self.journal.exists():
+            saved_instances, completed, _ = self.journal.load()
+            if saved_instances:
+                instances = saved_instances
+        dag = self.build_dag(instances)
+        self.db.write_meta({
+            "name": self.name,
+            "n_instances": len(instances),
+            "n_tasks": len(self.spec.tasks),
+            "n_nodes": len(dag.nodes),
+            "started": time.time(),
+        })
+        run_fn = runner or self._default_runner
+
+        def _on_result(res: TaskResult) -> None:
+            node = dag.nodes[res.id]
+            self.db.record(res.id, res.status, res.runtime, combo=node.combo,
+                           error=res.error, attempts=res.attempts)
+            if res.status == "ok":
+                completed.add(res.id)
+                self.journal.save(instances, completed, {"name": self.name})
+
+        if gang is not None:
+            return self._run_gang(dag, gang, completed, _on_result)
+
+        sched = Scheduler(slots=slots, max_retries=max_retries)
+        return sched.execute(dag, run_fn, completed=completed,
+                             on_result=_on_result)
+
+    def _run_gang(
+        self,
+        dag: TaskDAG,
+        gang: GangExecutor,
+        completed: set[str],
+        on_result: Callable[[TaskResult], None],
+    ) -> dict[str, TaskResult]:
+        """Level-synchronous gang execution: each DAG level is grouped by
+        stackability and dispatched in batches."""
+        results: dict[str, TaskResult] = {}
+        for nid in completed:
+            if nid in dag.nodes:
+                results[nid] = TaskResult(id=nid, status="ok", runtime=0.0,
+                                          started=0.0, finished=0.0, attempts=0)
+        for level in dag.levels():
+            nodes = [dag.nodes[nid] for nid in level if nid not in completed]
+            if not nodes:
+                continue
+            t0 = time.monotonic()
+            values = gang.run(nodes)
+            t1 = time.monotonic()
+            per = (t1 - t0) / max(1, len(nodes))
+            for node in nodes:
+                res = TaskResult(id=node.id, status="ok", runtime=per,
+                                 started=t0, finished=t1,
+                                 value=values[node.id])
+                results[node.id] = res
+                on_result(res)
+        return results
+
+
+def load_study(
+    *paths: str | Path,
+    registry: TaskRegistry | None = None,
+    root: str | Path = ".papas",
+    name: str | None = None,
+) -> ParameterStudy:
+    """Parse one or more parameter files into a runnable study."""
+    from .wdl import merge
+
+    specs = [parse_file(p) for p in paths]
+    spec = specs[0] if len(specs) == 1 else merge(*specs)
+    return ParameterStudy(spec, registry=registry, root=root, name=name)

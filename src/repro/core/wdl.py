@@ -1,0 +1,378 @@
+"""PaPaS Workflow Description Language (WDL) parser.
+
+Implements the keyword-value WDL of Ponce et al. (PEARC'18) §5:
+
+* A parameter study is a mapping of task names to up-to-two-level
+  keyword/value entries.
+* Serialization formats: YAML, JSON, and INI-like (subset).
+* Numeric ranges with step size: ``start:step:end`` (inclusive) and the
+  multiplicative form ``start:*k:end`` used by the paper's matmul example
+  (``16:*2:16384``).  The two-field form ``a:b`` means step 1.
+* ``#`` comments, colon-delimited entries, indentation scoping (all three
+  handled natively by the YAML reader; the INI reader implements a
+  restricted equivalent).
+* All keywords parse as strings; values are type-inferred.
+
+Reserved keywords (paper §5): command, name, environ, after, infiles,
+outfiles, substitute, parallel, batch, nnodes, ppnode, hosts, fixed,
+sampling.  Anything else is a user-defined keyword usable in
+interpolations (e.g. ``args`` in the paper's Fig. 5).
+"""
+from __future__ import annotations
+
+import configparser
+import dataclasses
+import io
+import json
+import re
+from pathlib import Path
+from typing import Any, Mapping, Sequence
+
+import yaml
+
+RESERVED_KEYWORDS = frozenset(
+    {
+        "command",
+        "name",
+        "environ",
+        "after",
+        "infiles",
+        "outfiles",
+        "substitute",
+        "parallel",
+        "batch",
+        "nnodes",
+        "ppnode",
+        "hosts",
+        "fixed",
+        "sampling",
+    }
+)
+
+#: ``start:step:end`` — step may be ``*k`` for multiplicative ranges.
+_RANGE_RE = re.compile(
+    r"^\s*(?P<start>[+-]?\d+(?:\.\d+)?(?:[eE][+-]?\d+)?)\s*:"
+    r"(?:\s*(?P<step>\*?\s*[+-]?\d+(?:\.\d+)?(?:[eE][+-]?\d+)?)\s*:)?"
+    r"\s*(?P<end>[+-]?\d+(?:\.\d+)?(?:[eE][+-]?\d+)?)\s*$"
+)
+
+
+class WDLError(ValueError):
+    """Raised on malformed workflow description input."""
+
+
+def _num(text: str) -> int | float:
+    """Parse a numeric literal, preferring int."""
+    f = float(text)
+    if f.is_integer() and "e" not in text.lower() and "." not in text:
+        return int(text)
+    return f
+
+
+def parse_range(text: str) -> list[int | float] | None:
+    """Expand ``start[:step]:end`` range notation to a value list.
+
+    Returns None when ``text`` is not range syntax.  Supports additive
+    steps (``1:2:9`` → 1,3,5,7,9) and multiplicative steps
+    (``16:*2:128`` → 16,32,64,128).  Two-field ``1:8`` means step 1.
+    """
+    if not isinstance(text, str):
+        return None
+    m = _RANGE_RE.match(text)
+    if not m:
+        return None
+    start = _num(m.group("start"))
+    end = _num(m.group("end"))
+    step_raw = m.group("step")
+    values: list[int | float] = []
+    if step_raw is None:
+        step: int | float = 1
+        multiplicative = False
+    else:
+        step_raw = step_raw.replace(" ", "")
+        multiplicative = step_raw.startswith("*")
+        step = _num(step_raw[1:] if multiplicative else step_raw)
+    if multiplicative:
+        if step == 0 or abs(step) == 1 or start == 0:
+            raise WDLError(f"degenerate multiplicative range: {text!r}")
+        cur = start
+        # multiplicative ranges iterate |cur| toward |end|
+        while (abs(cur) <= abs(end)) if abs(step) > 1 else (abs(cur) >= abs(end)):
+            values.append(cur)
+            cur = cur * step
+            if len(values) > 1_000_000:
+                raise WDLError(f"range too large: {text!r}")
+    else:
+        if step == 0:
+            raise WDLError(f"zero step in range: {text!r}")
+        cur = start
+        if step > 0:
+            while cur <= end + 1e-12:
+                values.append(cur if isinstance(start, float) or isinstance(step, float) else int(cur))
+                cur = cur + step
+                if len(values) > 1_000_000:
+                    raise WDLError(f"range too large: {text!r}")
+        else:
+            while cur >= end - 1e-12:
+                values.append(cur if isinstance(start, float) or isinstance(step, float) else int(cur))
+                cur = cur + step
+    return values
+
+
+def infer_value(raw: Any) -> Any:
+    """Type-infer a scalar WDL value (paper: 'values are inferred')."""
+    if isinstance(raw, str):
+        rng = parse_range(raw)
+        if rng is not None:
+            return rng
+        txt = raw.strip()
+        for caster in (int, float):
+            try:
+                return caster(txt)
+            except ValueError:
+                continue
+        if txt.lower() in ("true", "false"):
+            return txt.lower() == "true"
+        return raw
+    return raw
+
+
+def _expand_values(raw: Any) -> list[Any]:
+    """Normalize a keyword's raw value(s) into the multi-value list form."""
+    if isinstance(raw, list):
+        out: list[Any] = []
+        for item in raw:
+            v = infer_value(item)
+            if isinstance(v, list):
+                out.extend(v)
+            else:
+                out.append(v)
+        return out
+    v = infer_value(raw)
+    return v if isinstance(v, list) else [v]
+
+
+@dataclasses.dataclass
+class TaskSpec:
+    """One task (section) of a parameter study."""
+
+    task: str
+    command: str | None = None
+    name: str = ""
+    environ: dict[str, list[Any]] = dataclasses.field(default_factory=dict)
+    after: list[str] = dataclasses.field(default_factory=list)
+    infiles: dict[str, str] = dataclasses.field(default_factory=dict)
+    outfiles: dict[str, str] = dataclasses.field(default_factory=dict)
+    substitute: dict[str, list[Any]] = dataclasses.field(default_factory=dict)
+    parallel: str | None = None
+    batch: str | None = None
+    nnodes: int | None = None
+    ppnode: int | None = None
+    hosts: list[str] = dataclasses.field(default_factory=list)
+    fixed: list[list[str]] = dataclasses.field(default_factory=list)
+    sampling: dict[str, Any] | None = None
+    #: user-defined keywords → {subkey: [values]} or {None: [values]}
+    user: dict[str, dict[str | None, list[Any]]] = dataclasses.field(
+        default_factory=dict
+    )
+
+    def parameters(self) -> dict[str, list[Any]]:
+        """All sweepable parameters, name → value list.
+
+        Names are colon paths mirroring interpolation syntax:
+        ``environ:VAR``, ``<user_kw>:<sub>`` or bare ``<user_kw>``.
+        """
+        params: dict[str, list[Any]] = {}
+        for var, values in self.environ.items():
+            params[f"environ:{var}"] = values
+        for kw, subs in self.user.items():
+            for sub, values in subs.items():
+                key = kw if sub is None else f"{kw}:{sub}"
+                params[key] = values
+        for pattern, values in self.substitute.items():
+            params[f"substitute:{pattern}"] = values
+        return params
+
+
+@dataclasses.dataclass
+class StudySpec:
+    """A parsed parameter study: ordered tasks."""
+
+    tasks: dict[str, TaskSpec]
+
+    def validate(self) -> None:
+        names = set(self.tasks)
+        for t in self.tasks.values():
+            for dep in t.after:
+                if dep not in names:
+                    raise WDLError(f"task {t.task!r}: unknown dependency {dep!r}")
+            for group in t.fixed:
+                params = t.parameters()
+                lens = []
+                for pname in group:
+                    if pname not in params:
+                        # allow bare names matching a unique tail
+                        matches = [k for k in params if k == pname or k.endswith(":" + pname)]
+                        if len(matches) != 1:
+                            raise WDLError(
+                                f"task {t.task!r}: fixed refers to unknown/ambiguous "
+                                f"parameter {pname!r}"
+                            )
+                        pname = matches[0]
+                    lens.append(len(params[pname]))
+                if len(set(lens)) > 1:
+                    raise WDLError(
+                        f"task {t.task!r}: fixed group {group} has mismatched "
+                        f"value counts {lens} (bijection requires equal lengths)"
+                    )
+
+
+def _parse_task(name: str, body: Mapping[str, Any]) -> TaskSpec:
+    if not isinstance(body, Mapping):
+        raise WDLError(f"task {name!r}: body must be a mapping, got {type(body).__name__}")
+    spec = TaskSpec(task=str(name))
+    for kw_raw, val in body.items():
+        kw = str(kw_raw)
+        if kw == "command":
+            if not isinstance(val, str):
+                raise WDLError(f"task {name!r}: command must be a string")
+            spec.command = val
+        elif kw == "name":
+            spec.name = str(val)
+        elif kw == "environ":
+            if not isinstance(val, Mapping):
+                raise WDLError(f"task {name!r}: environ must be a mapping")
+            spec.environ = {str(k): _expand_values(v) for k, v in val.items()}
+        elif kw == "after":
+            spec.after = [str(v) for v in (val if isinstance(val, list) else [val])]
+        elif kw in ("infiles", "outfiles"):
+            if not isinstance(val, Mapping):
+                raise WDLError(f"task {name!r}: {kw} must be a mapping")
+            getattr(spec, kw).update({str(k): str(v) for k, v in val.items()})
+        elif kw == "substitute":
+            if not isinstance(val, Mapping):
+                raise WDLError(f"task {name!r}: substitute must be a mapping")
+            spec.substitute = {str(k): _expand_values(v) for k, v in val.items()}
+        elif kw == "parallel":
+            spec.parallel = str(val)
+        elif kw == "batch":
+            spec.batch = str(val)
+        elif kw in ("nnodes", "ppnode"):
+            setattr(spec, kw, int(val))
+        elif kw == "hosts":
+            spec.hosts = [str(v) for v in (val if isinstance(val, list) else [val])]
+        elif kw == "fixed":
+            if isinstance(val, list) and val and isinstance(val[0], list):
+                spec.fixed = [[str(p) for p in grp] for grp in val]
+            elif isinstance(val, list):
+                spec.fixed = [[str(p) for p in val]]
+            else:
+                raise WDLError(f"task {name!r}: fixed must be a list")
+        elif kw == "sampling":
+            if isinstance(val, str):
+                spec.sampling = {"method": val}
+            elif isinstance(val, Mapping):
+                spec.sampling = {str(k): v for k, v in val.items()}
+            else:
+                raise WDLError(f"task {name!r}: sampling must be a string or mapping")
+        else:
+            # user-defined keyword: scalar, list, or one more level of k/v
+            if isinstance(val, Mapping):
+                spec.user[kw] = {str(k): _expand_values(v) for k, v in val.items()}
+            else:
+                spec.user[kw] = {None: _expand_values(val)}
+    return spec
+
+
+def parse_dict(doc: Mapping[str, Any]) -> StudySpec:
+    """Parse an already-deserialized study document."""
+    if not isinstance(doc, Mapping) or not doc:
+        raise WDLError("study document must be a non-empty mapping of tasks")
+    tasks: dict[str, TaskSpec] = {}
+    for tname, body in doc.items():
+        tasks[str(tname)] = _parse_task(str(tname), body or {})
+    spec = StudySpec(tasks=tasks)
+    spec.validate()
+    return spec
+
+
+def parse_yaml(text: str) -> StudySpec:
+    try:
+        doc = yaml.safe_load(io.StringIO(text))
+    except yaml.YAMLError as e:  # pragma: no cover - passthrough
+        raise WDLError(f"YAML parse error: {e}") from e
+    return parse_dict(doc or {})
+
+
+def parse_json(text: str) -> StudySpec:
+    try:
+        doc = json.loads(text)
+    except json.JSONDecodeError as e:
+        raise WDLError(f"JSON parse error: {e}") from e
+    return parse_dict(doc)
+
+
+def parse_ini(text: str) -> StudySpec:
+    """INI-like flavor: sections are tasks; dotted keys give 2nd level;
+    comma-separated values are lists."""
+    cp = configparser.ConfigParser(interpolation=None, comment_prefixes=("#", ";"))
+    try:
+        cp.read_string(text)
+    except configparser.Error as e:
+        raise WDLError(f"INI parse error: {e}") from e
+    doc: dict[str, dict[str, Any]] = {}
+    for section in cp.sections():
+        body: dict[str, Any] = {}
+        for key, raw in cp.items(section):
+            value: Any = [v.strip() for v in raw.split(",")] if "," in raw else raw
+            if "." in key:
+                top, sub = key.split(".", 1)
+                body.setdefault(top, {})[sub] = value
+            else:
+                body[key] = value
+        doc[section] = body
+    return parse_dict(doc)
+
+
+def parse_file(path: str | Path) -> StudySpec:
+    """Parse a parameter file, dispatching on extension."""
+    path = Path(path)
+    text = path.read_text()
+    suffix = path.suffix.lower()
+    if suffix == ".json":
+        return parse_json(text)
+    if suffix in (".ini", ".cfg"):
+        return parse_ini(text)
+    return parse_yaml(text)
+
+
+def merge(*specs: StudySpec) -> StudySpec:
+    """Compose a study from multiple parameter files (paper §4.1: a
+    workflow description may be divided across files)."""
+    tasks: dict[str, TaskSpec] = {}
+    for spec in specs:
+        for tname, t in spec.tasks.items():
+            if tname in tasks:
+                base = tasks[tname]
+                for f in dataclasses.fields(TaskSpec):
+                    val = getattr(t, f.name)
+                    if f.name == "task":
+                        continue
+                    if isinstance(val, dict):
+                        merged = dict(getattr(base, f.name))
+                        for k, v in val.items():
+                            if (k in merged and isinstance(v, dict)
+                                    and isinstance(merged[k], dict)):
+                                merged[k] = {**merged[k], **v}
+                            else:
+                                merged[k] = v
+                        setattr(base, f.name, merged)
+                    elif isinstance(val, list):
+                        setattr(base, f.name, list(getattr(base, f.name)) + list(val))
+                    elif val not in (None, ""):
+                        setattr(base, f.name, val)
+            else:
+                tasks[tname] = dataclasses.replace(t)
+    out = StudySpec(tasks=tasks)
+    out.validate()
+    return out

@@ -1,0 +1,225 @@
+"""Per-architecture sharding rules (DP/TP/EP + ZeRO-1 + pod axis).
+
+Layout summary (baseline):
+* batch dims           → ("pod", "data")          [DP across pods too]
+* TP over "model": attention heads (wq/wk/wv out-dim, wo in-dim), MLP
+  hidden, MoE expert hidden (TP *within* every expert — no all_to_all),
+  SSD d_inner, vocab (embedding rows + logits).
+* stacked-segment leading axes are never sharded.
+* ZeRO-1: optimizer moments additionally shard their largest free axis
+  over "data" (param size threshold 1 MiB) — the memory saver that fits
+  26B fp32 Adam state on 16 GB chips.
+
+Everything returns jax.sharding.NamedSharding against the given mesh so
+jit in/out_shardings can consume it directly.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+ZERO1_MIN_BYTES = 1 << 20
+
+
+def _path_names(path: tuple) -> list[str]:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "idx"):
+            names.append(f"[{e.idx}]")
+    return names
+
+
+def _dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def param_spec(path: tuple, leaf: Any) -> P:
+    """PartitionSpec for one parameter leaf, by name + rank."""
+    names = _path_names(path)
+    name = names[-1]
+    parents = set(names[:-1])
+    ndim = leaf.ndim
+    lead = lambda base: (None,) * (ndim - base)  # noqa: E731 segment axes
+
+    if name == "embed":
+        return P("model", None)
+    if name == "lm_head":
+        return P(None, "model")
+    if name == "frontend_proj":
+        return P(None, None)
+    if name in ("wq", "wk", "wv", "in_proj"):
+        return P(*lead(2), None, "model")
+    if name in ("wi", "wi_gate", "wi_up"):
+        if "moe" in parents and "shared" not in parents:
+            return P(*lead(3), None, None, "model")   # (E, d, ffm)
+        return P(*lead(2), None, "model")
+    if name == "wo":
+        if "moe" in parents and "shared" not in parents:
+            return P(*lead(3), None, "model", None)   # (E, ffm, d)
+        return P(*lead(2), "model", None)
+    if name == "out_proj":
+        return P(*lead(2), "model", None)
+    if name == "conv_w":
+        return P(*lead(2), None, "model")
+    if name in ("conv_b", "bi"):
+        return P(*lead(1), "model")
+    if name == "norm" and "ssm" in parents:           # (d_inner,) gated norm
+        return P(*lead(1), "model")
+    if name == "router":
+        return P(*lead(2), None, None)
+    if name == "gate":
+        return P(*lead(2), None, None)
+    # norms, biases, A_log, D, dt_bias, q_norm/k_norm, scalars
+    return P(*([None] * ndim))
+
+
+def zero1_spec(spec: P, leaf: Any, mesh: Mesh) -> P:
+    """Add "data" sharding on the largest unsharded axis (ZeRO-1)."""
+    if leaf.size * 4 < ZERO1_MIN_BYTES:
+        return spec
+    dp = _dp_axes(mesh)
+    if not dp:
+        return spec
+    entries = list(spec) + [None] * (leaf.ndim - len(spec))
+    # pick the largest axis currently unsharded (skip tiny axes)
+    best, best_size = -1, 0
+    for i, (e, size) in enumerate(zip(entries, leaf.shape)):
+        if e is None and size > best_size and size >= np.prod(
+                [mesh.shape[a] for a in dp]):
+            best, best_size = i, size
+    if best < 0:
+        return spec
+    entries[best] = dp if len(dp) > 1 else dp[0]
+    return P(*entries)
+
+
+def _dp_entry(mesh: Mesh):
+    """PartitionSpec entry for the batch dim: ("pod","data") or "data"."""
+    dp = _dp_axes(mesh)
+    if not dp:
+        return None
+    return dp if len(dp) > 1 else dp[0]
+
+
+def batch_spec(mesh: Mesh) -> P:
+    return P(_dp_entry(mesh))
+
+
+def _axes_size(mesh: Mesh, entry: Any) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def fit_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop sharding on dims the global shape can't divide (jit input
+    shardings require exact divisibility); odd-vocab embeddings fall back
+    to sharding d_model instead."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is not None and dim % _axes_size(mesh, entry) != 0:
+            entry = None
+        out.append(entry)
+    # fallback: 2-D (V, d) with dropped dim-0 sharding → shard dim 1
+    if (len(shape) == 2 and out[0] is None and out[1] is None
+            and spec and spec[0] == "model"
+            and shape[1] % _axes_size(mesh, "model") == 0):
+        out[1] = "model"
+    return P(*out)
+
+
+def _named(mesh: Mesh, spec: P, shape: tuple[int, ...] | None = None
+           ) -> NamedSharding:
+    if shape is not None:
+        spec = fit_spec(spec, shape, mesh)
+    return NamedSharding(mesh, spec)
+
+
+def params_shardings(abstract_params: Any, mesh: Mesh) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    specs = [_named(mesh, param_spec(path, leaf), leaf.shape)
+             for path, leaf in leaves]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_shardings(abstract_opt: Any, mesh: Mesh, zero1: bool = True) -> Any:
+    """Moments follow the params (+ZeRO-1); count replicated."""
+    def one(path, leaf):
+        names = _path_names(path)
+        if names and names[0] == "count":
+            return _named(mesh, P())
+        # strip the leading "m"/"v" for rule lookup
+        spec = fit_spec(param_spec(tuple(path[1:]), leaf), leaf.shape, mesh)
+        if zero1:
+            spec = zero1_spec(spec, leaf, mesh)
+        return _named(mesh, spec, leaf.shape)
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(abstract_opt)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in leaves])
+
+
+def state_shardings(abstract_state: Any, mesh: Mesh, zero1: bool = True
+                    ) -> dict[str, Any]:
+    return {
+        "params": params_shardings(abstract_state["params"], mesh),
+        "opt": opt_shardings(abstract_state["opt"], mesh, zero1),
+        "step": _named(mesh, P()),
+    }
+
+
+def batch_shardings(abstract_batch: Any, mesh: Mesh) -> Any:
+    dp = _dp_entry(mesh)
+
+    def one(leaf):
+        extra = (None,) * (leaf.ndim - 1)
+        return _named(mesh, P(dp, *extra), leaf.shape)
+    return jax.tree.map(one, abstract_batch)
+
+
+def cache_shardings(abstract_cache: Any, mesh: Mesh) -> Any:
+    """Decode caches: batch over DP; kv-heads (or head_dim when kv-heads
+    don't divide) over model; SSM state heads over model."""
+    msize = mesh.shape.get("model", 1)
+    dp = _dp_entry(mesh)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        if name == "pos":
+            return _named(mesh, P())
+        nd = leaf.ndim
+        if name in ("k", "v"):
+            # (R, B, T, Hkv, D) or (B, T, Hkv, D)
+            lead = (None,) * (nd - 4)
+            hkv = leaf.shape[-2]
+            if hkv % msize == 0:
+                return _named(mesh, P(*lead, dp, None, "model", None),
+                              leaf.shape)
+            return _named(mesh, P(*lead, dp, None, None, "model"),
+                          leaf.shape)
+        if name == "ssm":
+            # (R, B, H, P, N) or (B, H, P, N)
+            lead = (None,) * (nd - 4)
+            return _named(mesh, P(*lead, dp, "model", None, None),
+                          leaf.shape)
+        if name == "conv":
+            # (R, B, K-1, C) or (B, K-1, C)
+            lead = (None,) * (nd - 3)
+            return _named(mesh, P(*lead, dp, None, "model"), leaf.shape)
+        return _named(mesh, P(*([None] * nd)))
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(abstract_cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in leaves])

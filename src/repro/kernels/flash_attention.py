@@ -1,0 +1,144 @@
+"""Pallas TPU flash attention (GQA, causal, sliding-window).
+
+TPU-native design notes (hardware adaptation, see DESIGN.md):
+* grid = (B·Hq, S/BQ, S/BK); the KV dimension is the innermost grid axis
+  so the online-softmax running state (m, l, acc) lives in VMEM scratch
+  across KV iterations (TPU grids execute sequentially per core — the
+  idiomatic TPU analogue of a CUDA persistent-CTA loop).
+* BlockSpecs tile Q/K/V into (BQ, D)/(BK, D) VMEM blocks; D ≤ 256 keeps
+  the MXU matmuls (BQ×D)·(D×BK) and (BQ×BK)·(BK×D) hardware-aligned
+  (block sizes are multiples of 128).
+* GQA is resolved in the index maps: query head h reads KV head
+  h // (Hq/Hkv) — no KV replication in HBM.
+* Causal/sliding-window masking is applied in-kernel per (BQ, BK) tile;
+  fully-masked tiles short-circuit via ``pl.when`` (no MXU work).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                 *, scale: float, causal: bool, window: int,
+                 block_q: int, block_k: int, n_kv_blocks: int,
+                 valid_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # tile-level reachability: skip tiles that are fully masked
+    q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    if causal:
+        reachable = k_start <= q_start + block_q - 1
+    else:
+        reachable = True
+    if window > 0:
+        # need k_pos >= q_pos - window + 1 for some pair in tile
+        reachable = jnp.logical_and(
+            reachable, k_start + block_k - 1 >= q_start - window + 1) \
+            if causal else reachable
+
+    @pl.when(reachable if isinstance(reachable, jax.Array) else True)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale          # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)                  # (BK, D)
+        v = v_ref[0].astype(jnp.float32)                  # (BK, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (BQ, BK)
+        mask = k_pos < valid_len
+        if causal:
+            mask = jnp.logical_and(mask, q_pos >= k_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                # (BQ,)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_cur
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,            # (B, S, Hq, D)
+    k: jax.Array,            # (B, S, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+    valid_len: int | None = None,
+) -> jax.Array:
+    """Blockwise attention; exact (online softmax).  S must be divisible
+    by the block sizes (the ops wrapper pads)."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+
+    # (B, S, H, D) → (B·H, S, D)
+    qr = q.transpose(0, 2, 1, 3).reshape(b * hq, s, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+
+    n_q = s // block_q
+    n_k = s // block_k
+
+    def kv_index(bh, qi, ki):
+        bb = bh // hq
+        hh = bh % hq
+        return (bb * hkv + hh // group, ki, 0)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=d ** -0.5, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_kv_blocks=n_k,
+        valid_len=valid_len if valid_len is not None else s)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, hq, s, d).transpose(0, 2, 1, 3)

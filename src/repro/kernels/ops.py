@@ -1,0 +1,62 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On non-TPU backends (this CPU container) the kernels execute in
+``interpret=True`` mode — the kernel body runs as plain JAX ops, which
+validates correctness; TPU compiles the real Mosaic kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import moe_gmm as _gmm
+from . import ssd_scan as _ssd
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    """Flash attention with automatic padding to block multiples."""
+    b, s, hq, d = q.shape
+    bq = min(block_q, max(16, s))
+    bk = min(block_k, max(16, s))
+    pad = (-s) % max(bq, bk)
+    if pad:
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:
+        qp, kp, vp = q, k, v
+    out = _fa.flash_attention(
+        qp, kp, vp, causal=causal, window=window,
+        block_q=bq, block_k=bk, interpret=_interpret_default(),
+        valid_len=s)
+    return out[:, :s] if pad else out
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, log_a, b_mat, c_mat, *, chunk: int = 256,
+             initial_state=None):
+    return _ssd.ssd_scan(x, log_a, b_mat, c_mat, chunk=chunk,
+                         initial_state=initial_state,
+                         interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols"))
+def grouped_matmul(x, w, group_sizes, *, block_rows: int = 128,
+                   block_cols: int = 128):
+    f = w.shape[-1]
+    bc = min(block_cols, f)
+    while f % bc:
+        bc -= 1
+    return _gmm.grouped_matmul(x, w, group_sizes,
+                               block_rows=block_rows, block_cols=bc,
+                               interpret=_interpret_default())

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """Dense masked attention oracle. q (B,S,Hq,D); k,v (B,S,Hkv,D)."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    qg = q.reshape(b, s, hkv, hq // hkv, d).astype(jnp.float32) * d ** -0.5
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), jnp.bool_)
+    if causal:
+        mask = i >= j
+    if window > 0:
+        mask = mask & (i - j < window)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, hq, d).astype(q.dtype)
+
+
+def ssd_scan_ref(x, log_a, b_mat, c_mat, initial_state=None):
+    """Exact sequential SSD recurrence (lax.scan over time)."""
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    bh = jnp.repeat(b_mat, rep, axis=2).astype(jnp.float32)
+    ch = jnp.repeat(c_mat, rep, axis=2).astype(jnp.float32)
+    h0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((bsz, h, p, n), jnp.float32))
+
+    def step(state, inp):
+        x_t, la_t, b_t, c_t = inp
+        a = jnp.exp(la_t.astype(jnp.float32))[..., None, None]
+        state = state * a + jnp.einsum(
+            "bhp,bhn->bhpn", x_t.astype(jnp.float32), b_t)
+        y = jnp.einsum("bhpn,bhn->bhp", state, c_t)
+        return state, y
+
+    xs = (x.transpose(1, 0, 2, 3), log_a.transpose(1, 0, 2),
+          bh.transpose(1, 0, 2, 3), ch.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final.astype(x.dtype)
+
+
+def grouped_matmul_ref(x, w, group_sizes):
+    """Per-row expert matmul oracle. x (T,d); w (E,d,f)."""
+    t = x.shape[0]
+    bounds = jnp.cumsum(group_sizes)
+    expert_of = jnp.searchsorted(bounds, jnp.arange(t), side="right")
+    w_rows = jnp.take(w, expert_of, axis=0)              # (T, d, f)
+    return jnp.einsum("td,tdf->tf", x.astype(jnp.float32),
+                      w_rows.astype(jnp.float32)).astype(x.dtype)

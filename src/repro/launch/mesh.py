@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Importing this module never touches jax device state; meshes are built
+lazily inside the function (the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to get placeholder devices).
+
+Topology (TPU v5e numbers used by the roofline):
+* single pod: (16, 16) = 256 chips, axes ("data", "model")
+* multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model")
+"""
+from __future__ import annotations
+
+import jax
+
+# v5e hardware constants (per chip) — §Roofline inputs
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1) -> jax.sharding.Mesh:
+    """Whatever this process has (tests / smoke runs)."""
+    n = jax.device_count()
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def mesh_chips(mesh: jax.sharding.Mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,78 @@
+"""The PaPaS driver: run a WDL parameter file where tasks are TRAINING
+RUNS of this framework — the paper's technique applied to itself.
+
+    PYTHONPATH=src python -m repro.launch.sweep examples/lr_sweep.yaml
+
+Tasks whose command starts with ``train`` are resolved to in-process
+training calls (registry execution); anything else runs as a shell
+command.  ``parallel: vmap-stack`` gang-packs stackable instances (same
+arch/shape, different scalars) into ONE compiled program via
+``repro.train.ensemble`` — the TPU realization of the paper's
+job-batching (§4.3).
+"""
+from __future__ import annotations
+
+import argparse
+import shlex
+from pathlib import Path
+from typing import Any
+
+import jax
+
+from repro.configs import get_smoke
+from repro.core import GangExecutor, load_study, stackable_key
+from repro.train.ensemble import train_ensemble
+
+
+def _train_combo(combo: dict[str, Any], defaults: dict[str, Any]) -> float:
+    """One member training run (used for one-per-task dispatch)."""
+    from repro.train.ensemble import train_members
+    args = {**defaults, **combo}
+    return train_members([args])[0]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paramfile", nargs="+")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--gang", action="store_true",
+                    help="vmap-stack stackable instances (one dispatch)")
+    ap.add_argument("--root", default=".papas")
+    args = ap.parse_args()
+
+    study = load_study(*[Path(p) for p in args.paramfile], root=args.root)
+
+    # registry: any task whose command begins with "train" runs in-process
+    registry = {}
+    for tname, task in study.spec.tasks.items():
+        if task.command and task.command.split()[0] == "train":
+            defaults = dict(
+                tok for tok in
+                (t.split("=", 1) for t in shlex.split(task.command)[1:]
+                 if "=" in t))
+            registry[tname] = (
+                lambda combo, _d=defaults: _train_combo(combo, _d))
+    study.registry.update(registry)
+
+    if args.gang:
+        def gang_runner(nodes):
+            members = [dict(n.combo) for n in nodes]
+            return train_ensemble(members)
+        gang = GangExecutor(stackable_key, gang_runner)
+        results = study.run(gang=gang, resume=args.resume)
+        print(f"[gang] {gang.stats.tasks} tasks in "
+              f"{gang.stats.dispatches} dispatches "
+              f"(batching ×{gang.stats.batching_factor:.0f})")
+    else:
+        results = study.run(resume=args.resume)
+
+    ok = sum(1 for r in results.values() if r.status == "ok")
+    print(f"{ok}/{len(results)} instances complete; "
+          f"provenance in {study.db.dir}")
+    for rid, res in sorted(results.items()):
+        val = res.value if res.value is not None else ""
+        print(f"  {rid}: {res.status} ({res.runtime:.2f}s) {val}")
+
+
+if __name__ == "__main__":
+    main()

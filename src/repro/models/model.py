@@ -1,0 +1,98 @@
+"""Public model API: a thin functional wrapper over the substrate.
+
+``Model`` binds an ArchConfig to init/loss/decode callables, and
+``input_specs`` produces ShapeDtypeStruct stand-ins for every input of a
+given (arch × shape) cell — the dry-run lowers against these without
+allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig, ShapeConfig
+from .transformer import (
+    decode_step, forward, init_cache, init_params, loss_fn,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    def init(self, key: jax.Array) -> dict[str, Any]:
+        return init_params(self.cfg, key)
+
+    def init_abstract(self, key: jax.Array | None = None):
+        """Parameter shapes without allocation (for dry-run sharding)."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(lambda k: init_params(self.cfg, k), key)
+
+    def forward(self, params, batch, moe_groups: int = 1):
+        return forward(self.cfg, params, batch, moe_groups)
+
+    def loss(self, params, batch, moe_groups: int = 1):
+        return loss_fn(self.cfg, params, batch, moe_groups)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return init_cache(self.cfg, batch, max_len, dtype)
+
+    def decode_step(self, params, cache, token):
+        return decode_step(self.cfg, params, cache, token)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one (arch × shape) cell.
+
+    train/prefill → the training batch; decode → one-token step inputs
+    (the KV cache spec is produced separately via ``cache_specs``).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    f32, i32, bf16 = jnp.float32, jnp.int32, jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        if cfg.input_mode == "tokens":
+            return {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+        if cfg.input_mode == "embeds":
+            return {"embeds": sds((b, s, cfg.d_model), bf16),
+                    "labels": sds((b, s), i32)}
+        # mixed: patches occupy the first n_patches positions
+        st = s - cfg.n_patches
+        return {"tokens": sds((b, st), i32),
+                "patch_embeds": sds((b, cfg.n_patches, cfg.d_model), bf16),
+                "labels": sds((b, s), i32)}
+    # decode: one new token against a seq_len-deep cache
+    return {"token": sds((b, 1), i32)}
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> Any:
+    """Abstract KV/SSM cache for a decode cell (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len, dtype))
+
+
+def synthetic_batch(cfg: ArchConfig, batch: int, seq: int,
+                    key: jax.Array) -> dict[str, jax.Array]:
+    """Materialized random batch for smoke tests / examples."""
+    ks = jax.random.split(key, 3)
+    if cfg.input_mode == "tokens":
+        toks = jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size)
+        return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    if cfg.input_mode == "embeds":
+        emb = jax.random.normal(ks[0], (batch, seq, cfg.d_model),
+                                jnp.bfloat16) * 0.1
+        labels = jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab_size)
+        return {"embeds": emb, "labels": labels}
+    npatch = min(cfg.n_patches, seq // 2)
+    st = seq - npatch
+    toks = jax.random.randint(ks[0], (batch, st), 0, cfg.vocab_size)
+    patches = jax.random.normal(ks[1], (batch, npatch, cfg.d_model),
+                                jnp.bfloat16) * 0.1
+    labels = jnp.concatenate(
+        [jnp.full((batch, npatch), -100, jnp.int32),
+         jax.random.randint(ks[2], (batch, st), 0, cfg.vocab_size)], axis=1)
+    return {"tokens": toks, "patch_embeds": patches, "labels": labels}

@@ -1,0 +1,82 @@
+"""${...} interpolation + substitute tests (paper §5)."""
+import pytest
+
+from repro.core import (
+    InterpolationError, ParameterStudy, interpolate, parse_yaml,
+    substitute_content,
+)
+
+
+class TestInterpolate:
+    COMBO = {"args:size": 64, "environ:OMP_NUM_THREADS": 4, "args:mode": "fast"}
+
+    def test_two_level(self):
+        out = interpolate("run ${args:size}", self.COMBO)
+        assert out == "run 64"
+
+    def test_bare_keyword_resolves_unique_tail(self):
+        assert interpolate("m=${mode}", self.COMBO) == "m=fast"
+
+    def test_multiple_refs(self):
+        out = interpolate(
+            "matmul ${args:size} r_${args:size}N_${environ:OMP_NUM_THREADS}T",
+            self.COMBO)
+        assert out == "matmul 64 r_64N_4T"
+
+    def test_unresolvable_raises(self):
+        with pytest.raises(InterpolationError):
+            interpolate("${nope}", self.COMBO)
+
+    def test_float_formatting_integral(self):
+        assert interpolate("${x}", {"a:x": 2.0}) == "2"
+
+    def test_inter_task(self):
+        studies = {"prep": {"args:outfile": "data.bin"}}
+        out = interpolate("consume ${prep:args:outfile}", {}, studies=studies)
+        assert out == "consume data.bin"
+
+
+class TestSubstitute:
+    def test_regex_replacement(self):
+        content = "<steps>100</steps>\n<agents>50</agents>"
+        rules = {r"<steps>\d+</steps>": "<steps>500</steps>"}
+        out = substitute_content(content, rules)
+        assert "<steps>500</steps>" in out
+        assert "<agents>50</agents>" in out
+
+    def test_substitute_parameter_expansion(self):
+        # substitute values are sweepable parameters
+        spec = parse_yaml("""
+sim:
+  command: netlogo model.xml
+  substitute:
+    "NUM_AGENTS": [10, 20, 30]
+""")
+        study = ParameterStudy(spec, root="/tmp/papas_sub", name="sub")
+        assert study.space().size() == 3
+
+
+class TestEndToEndRender:
+    def test_paper_matmul_commands(self):
+        spec = parse_yaml("""
+matmulOMP:
+  environ:
+    OMP_NUM_THREADS: ["1:8"]
+  args:
+    size: ["16:*2:16384"]
+  command: matmul ${args:size} result_${args:size}N_${environ:OMP_NUM_THREADS}T.txt
+""")
+        study = ParameterStudy(spec, root="/tmp/papas_rend", name="rend")
+        insts = study.instances()
+        assert len(insts) == 88
+        dag = study.build_dag(insts)
+        cmds = set()
+        envs = set()
+        for node in dag.nodes.values():
+            cmd, env = study.render_node(node)
+            cmds.add(cmd)
+            envs.add(env["OMP_NUM_THREADS"])
+        assert len(cmds) == 88                     # all unique workflows
+        assert "matmul 16 result_16N_1T.txt" in cmds
+        assert "matmul 16384 result_16384N_8T.txt" in cmds
+        assert envs == {str(i) for i in range(1, 9)}

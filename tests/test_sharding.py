@@ -1,0 +1,123 @@
+"""Sharding-rule unit tests (no multi-device mesh needed: rules are pure
+functions over paths/shapes + a mesh object built from 1 device)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke
+from repro.distributed import sharding as shd
+from repro.models import Model
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single real device, axis sizes 1: rule structure is what we test
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def specs_by_suffix(tree, mesh):
+    out = {}
+    shardings = shd.params_shardings(tree, mesh)
+    flat_s = jax.tree_util.tree_flatten_with_path(shardings)[0]
+    for path, sh in flat_s:
+        name = shd._path_names(path)[-1]
+        out.setdefault(name, set()).add(tuple(sh.spec))
+    return out
+
+
+class TestParamRules:
+    def test_dense_rules(self, mesh):
+        cfg = get_smoke("deepseek-7b")
+        params = Model(cfg).init_abstract()
+        by = specs_by_suffix(params, mesh)
+        assert by["embed"] == {("model", None)}
+        assert by["wq"] == {(None, None, "model")}      # segment-stacked
+        assert by["wo"] == {(None, "model", None)}
+        assert by["lm_head"] == {(None, "model")}
+
+    def test_moe_rules(self, mesh):
+        cfg = get_smoke("olmoe-1b-7b")
+        params = Model(cfg).init_abstract()
+        by = specs_by_suffix(params, mesh)
+        assert by["wi_gate"] == {(None, None, None, "model")}   # (R,E,d,f)
+        # both attention wo (R,ad,d) and moe wo (R,E,f,d) exist
+        assert by["wo"] == {(None, "model", None),
+                            (None, None, "model", None)}
+        assert by["router"] == {(None, None, None)}
+
+    def test_ssm_rules(self, mesh):
+        cfg = get_smoke("mamba2-780m")
+        params = Model(cfg).init_abstract()
+        by = specs_by_suffix(params, mesh)
+        assert by["in_proj"] == {(None, None, "model")}
+        assert by["out_proj"] == {(None, "model", None)}
+        assert by["A_log"] == {(None, None)}            # replicated
+
+    def test_norms_replicated(self, mesh):
+        cfg = get_smoke("gemma-7b")
+        params = Model(cfg).init_abstract()
+        by = specs_by_suffix(params, mesh)
+        assert by["norm1"] == {(None, None)}
+
+
+class TestFitSpec:
+    def big_mesh(self):
+        # mesh object with fake sizes via Mesh of a reshaped device array
+        # is impossible with 1 device; test fit_spec math directly with a
+        # stub exposing .shape
+        class StubMesh:
+            shape = {"data": 16, "model": 16}
+            axis_names = ("data", "model")
+        return StubMesh()
+
+    def test_non_divisible_dropped(self):
+        m = self.big_mesh()
+        spec = shd.fit_spec(P("model", None), (92553, 6144), m)
+        assert tuple(spec) == (None, "model")   # vocab fallback to d
+
+    def test_divisible_kept(self):
+        m = self.big_mesh()
+        spec = shd.fit_spec(P("model", None), (92672, 6144), m)
+        assert tuple(spec) == ("model", None)
+
+    def test_tuple_axes(self):
+        m = self.big_mesh()
+        spec = shd.fit_spec(P(("data", "model")), (512,), m)
+        assert tuple(spec) == ((("data", "model")),)
+        spec2 = shd.fit_spec(P(("data", "model")), (100,), m)
+        assert tuple(spec2) == (None,)
+
+    def test_batch_one_replicated(self):
+        m = self.big_mesh()
+        spec = shd.fit_spec(P("data", None), (1, 1), m)
+        assert tuple(spec) == (None, None)
+
+
+class TestZero1:
+    def test_moments_pick_largest_free_axis(self):
+        class StubMesh:
+            shape = {"data": 4, "model": 4}
+            axis_names = ("data", "model")
+        leaf = jax.ShapeDtypeStruct((1024, 4096), jnp.float32)
+        spec = shd.zero1_spec(P(None, "model"), leaf, StubMesh())
+        assert tuple(spec) == ("data", "model")
+
+    def test_small_leaves_untouched(self):
+        class StubMesh:
+            shape = {"data": 4, "model": 4}
+            axis_names = ("data", "model")
+        leaf = jax.ShapeDtypeStruct((8,), jnp.float32)
+        assert tuple(shd.zero1_spec(P(None), leaf, StubMesh())) == (None,)
+
+
+class TestCacheRules:
+    def test_kv_cache_heads_or_headdim(self, mesh):
+        cfg = get_smoke("gemma3-1b")      # kv=1 → head_dim sharding path
+        cache = jax.eval_shape(
+            lambda: Model(cfg).init_cache(batch=2, max_len=16))
+        shardings = shd.cache_shardings(cache, mesh)
+        flat = jax.tree_util.tree_flatten_with_path(shardings)[0]
+        kv_specs = {tuple(sh.spec) for path, sh in flat
+                    if shd._path_names(path)[-1] in ("k", "v")}
+        assert kv_specs    # non-empty; structure validated

@@ -1,0 +1,66 @@
+"""File staging: infiles, substitute rewriting, NFS-style hard links."""
+from pathlib import Path
+
+from repro.core import (
+    ParameterStudy, collect_outputs, parse_yaml, stage_instance,
+)
+
+
+def test_substitute_rewrites_per_instance(tmp_path):
+    src = tmp_path / "model.xml"
+    src.write_text("<steps>100</steps><agents>50</agents>")
+    combo = {"substitute:<steps>\\d+</steps>": "<steps>500</steps>"}
+    inst = stage_instance(tmp_path / "work", "i0", {"m": "model.xml"},
+                          combo, {"<steps>\\d+</steps>": [0]},
+                          source_root=tmp_path)
+    out = (inst / "model.xml").read_text()
+    assert "<steps>500</steps>" in out and "<agents>50</agents>" in out
+
+
+def test_unchanged_inputs_hardlinked(tmp_path):
+    src = tmp_path / "shared.dat"
+    src.write_text("constant input")
+    inst = stage_instance(tmp_path / "work", "i1", {"d": "shared.dat"},
+                          {}, None, source_root=tmp_path)
+    staged = inst / "shared.dat"
+    assert staged.read_text() == "constant input"
+    assert staged.stat().st_ino == src.stat().st_ino   # same inode
+
+
+def test_interpolated_names_and_collection(tmp_path):
+    (tmp_path / "in_4.txt").write_text("x")
+    combo = {"args:size": 4}
+    inst = stage_instance(tmp_path / "work", "i2",
+                          {"f": "in_${args:size}.txt"}, combo,
+                          source_root=tmp_path)
+    (inst / "out_4.txt").write_text("result")
+    got = collect_outputs(inst, {"o": "out_${args:size}.txt"}, combo,
+                          tmp_path / "prov")
+    assert got["o"].read_text() == "result"
+
+
+def test_depth_vs_breadth_order(tmp_path):
+    spec = parse_yaml("""
+prep:
+  args:
+    x: [1, 2]
+  command: unused
+train:
+  after: [prep]
+  command: unused
+""")
+    runs = []
+    reg = {"prep": lambda c: runs.append(("prep", c.get("args:x"))),
+           "train": lambda c: runs.append(("train", None))}
+
+    from repro.core import Scheduler
+    study = ParameterStudy(spec, registry=reg, root=tmp_path, name="bf")
+    dag = study.build_dag()
+    Scheduler(order="breadth").execute(dag, study._default_runner)
+    breadth = [t for t, _ in runs]
+    assert breadth[:2] == ["prep", "prep"]      # level-major
+
+    runs.clear()
+    Scheduler(order="depth").execute(dag, study._default_runner)
+    depth = [t for t, _ in runs]
+    assert depth[:2] == ["prep", "train"]       # instance-major

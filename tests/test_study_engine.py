@@ -1,0 +1,158 @@
+"""Parameter-study engine integration: provenance, journal, gang exec."""
+import json
+
+import pytest
+
+from repro.core import (
+    GangExecutor, ParameterStudy, StudyJournal, parse_yaml, stackable_key,
+)
+
+SPEC = """
+work:
+  args:
+    x: [1, 2, 3]
+    y: [10, 20]
+  command: echo ${args:x} ${args:y}
+"""
+
+
+def make_study(tmp_path, registry=None, name="s"):
+    return ParameterStudy(parse_yaml(SPEC), registry=registry,
+                          root=tmp_path, name=name)
+
+
+class TestRun:
+    def test_registry_execution(self, tmp_path):
+        calls = []
+        study = make_study(tmp_path,
+                           {"work": lambda c: calls.append(dict(c)) or 0})
+        res = study.run()
+        assert len(calls) == 6
+        assert all(r.status == "ok" for r in res.values())
+
+    def test_provenance_records(self, tmp_path):
+        study = make_study(tmp_path, {"work": lambda c: 0})
+        study.run()
+        recs = list(study.db.records())
+        assert len(recs) == 6
+        assert all(r["status"] == "ok" for r in recs)
+        assert study.db.runtime_summary()["count"] == 6
+
+    def test_journal_resume(self, tmp_path):
+        boom = {"armed": True}
+
+        def worker(combo):
+            if boom["armed"] and combo["args:x"] == 3:
+                raise RuntimeError("node died")
+            return combo["args:x"]
+
+        study = make_study(tmp_path, {"work": worker}, name="resume")
+        res1 = study.run(max_retries=0)
+        ok1 = {k for k, r in res1.items() if r.status == "ok"}
+        assert len(ok1) == 4   # two x==3 instances failed
+
+        # "restart the study" — a fresh engine object, same journal
+        boom["armed"] = False
+        study2 = make_study(tmp_path, {"work": worker}, name="resume")
+        ran = []
+        res2 = study2.run(resume=True,
+                          runner=lambda n: ran.append(n.id) or 0)
+        assert len(ran) == 2   # only the failed instances re-ran
+        assert all(r.status == "ok" for r in res2.values())
+
+    def test_shell_execution(self, tmp_path):
+        spec = parse_yaml("""
+sh:
+  args:
+    n: [1, 2]
+  command: echo value-${args:n}
+""")
+        study = ParameterStudy(spec, root=tmp_path, name="sh")
+        res = study.run()
+        outs = sorted(r.value.stdout.strip() for r in res.values())
+        assert outs == ["value-1", "value-2"]
+
+    def test_environ_propagates_to_subprocess(self, tmp_path):
+        spec = parse_yaml("""
+sh:
+  environ:
+    PAPAS_TEST_VAR: [abc]
+  command: printenv PAPAS_TEST_VAR
+""")
+        study = ParameterStudy(spec, root=tmp_path, name="env")
+        res = study.run()
+        (r,) = res.values()
+        assert r.value.stdout.strip() == "abc"
+
+
+class TestGang:
+    def test_gang_batches_dispatches(self, tmp_path):
+        study = make_study(tmp_path, name="gang")
+
+        def gang_runner(nodes):
+            return [n.combo["args:x"] * n.combo["args:y"] for n in nodes]
+
+        gang = GangExecutor(stackable_key, gang_runner)
+        res = study.run(gang=gang)
+        assert len(res) == 6
+        assert gang.stats.dispatches == 1          # one launch for all 6
+        assert gang.stats.batching_factor == 6.0
+        values = {r.value for r in res.values()}
+        assert values == {10, 20, 30, 40, 60, 20 * 3}
+
+    def test_gang_respects_max_group(self, tmp_path):
+        study = make_study(tmp_path, name="gang2")
+        gang = GangExecutor(stackable_key,
+                            lambda nodes: [0] * len(nodes), max_group=4)
+        study.run(gang=gang)
+        assert gang.stats.dispatches == 2           # 4 + 2
+
+    def test_gang_dag_levels(self, tmp_path):
+        spec = parse_yaml("""
+prep:
+  args:
+    x: [1, 2]
+  command: echo prep
+train:
+  after: [prep]
+  command: echo train
+""")
+        study = ParameterStudy(spec, root=tmp_path, name="gang3")
+        order = []
+
+        def gang_runner(nodes):
+            order.append({n.task for n in nodes})
+            return [0] * len(nodes)
+
+        study.run(gang=GangExecutor(stackable_key, gang_runner))
+        assert order == [{"prep"}, {"train"}]       # level-synchronous
+
+
+class TestVisualization:
+    def test_dot_output(self, tmp_path):
+        study = make_study(tmp_path, name="viz")
+        dot = study.visualize("dot")
+        assert dot.startswith("digraph")
+        assert dot.count("work@") >= 6
+
+    def test_ascii_output(self, tmp_path):
+        study = make_study(tmp_path, name="viz2")
+        txt = study.visualize("ascii")
+        assert "level 0:" in txt
+
+
+class TestJournal:
+    def test_atomic_save_load(self, tmp_path):
+        j = StudyJournal(tmp_path / "j.json")
+        j.save([{"a": 1}], {"x"}, {"name": "n"})
+        insts, completed, meta = j.load()
+        assert insts == [{"a": 1}]
+        assert completed == {"x"}
+        assert meta["name"] == "n"
+
+    def test_mark_complete(self, tmp_path):
+        j = StudyJournal(tmp_path / "j.json")
+        j.save([], set(), {})
+        j.mark_complete("t1")
+        _, completed, _ = j.load()
+        assert completed == {"t1"}

@@ -1,0 +1,137 @@
+"""WDL parser tests: formats, ranges, keywords, validation errors."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    WDLError, merge, parse_dict, parse_ini, parse_json, parse_range,
+    parse_yaml,
+)
+
+
+class TestRanges:
+    def test_additive_default_step(self):
+        assert parse_range("1:8") == [1, 2, 3, 4, 5, 6, 7, 8]
+
+    def test_additive_step(self):
+        assert parse_range("1:2:9") == [1, 3, 5, 7, 9]
+
+    def test_multiplicative(self):
+        assert parse_range("16:*2:16384") == [
+            16, 32, 64, 128, 256, 512, 1024, 2048, 4096, 8192, 16384]
+
+    def test_float_range(self):
+        vals = parse_range("0.5:0.25:1.5")
+        assert vals == pytest.approx([0.5, 0.75, 1.0, 1.25, 1.5])
+
+    def test_negative_step(self):
+        assert parse_range("5:-2:1") == [5, 3, 1]
+
+    def test_not_a_range(self):
+        assert parse_range("hello") is None
+        assert parse_range("a:b:c") is None
+
+    def test_zero_step_raises(self):
+        with pytest.raises(WDLError):
+            parse_range("1:0:5")
+
+    @given(st.integers(-50, 50), st.integers(1, 7), st.integers(-50, 50))
+    @settings(max_examples=100, deadline=None)
+    def test_additive_matches_python_range(self, a, s, b):
+        got = parse_range(f"{a}:{s}:{b}")
+        assert got == list(range(a, b + 1, s))
+
+
+class TestParsing:
+    YAML = """
+matmulOMP:
+  name: scaling study
+  environ:
+    OMP_NUM_THREADS: ["1:8"]
+  args:
+    size: ["16:*2:16384"]
+  command: matmul ${args:size} out.txt
+"""
+
+    def test_yaml_matches_paper_example(self):
+        spec = parse_yaml(self.YAML)
+        task = spec.tasks["matmulOMP"]
+        params = task.parameters()
+        assert len(params["environ:OMP_NUM_THREADS"]) == 8
+        assert len(params["args:size"]) == 11
+        # paper: "This study corresponds to 88 independent executions"
+        from repro.core import from_task
+        assert from_task(params, task.fixed).size() == 88
+
+    def test_json_equivalent(self):
+        spec = parse_json(
+            '{"t": {"command": "run ${args:x}", "args": {"x": ["1:3"]}}}')
+        assert spec.tasks["t"].parameters()["args:x"] == [1, 2, 3]
+
+    def test_ini_flavor(self):
+        spec = parse_ini("[t]\ncommand = run\nargs.x = 1, 2, 3\n")
+        assert spec.tasks["t"].parameters()["args:x"] == [1, 2, 3]
+
+    def test_comments_ignored(self):
+        spec = parse_yaml("# comment\nt:\n  command: run  # trailing\n")
+        assert spec.tasks["t"].command.startswith("run")
+
+    def test_unknown_dependency_rejected(self):
+        with pytest.raises(WDLError):
+            parse_yaml("t:\n  command: x\n  after: [missing]\n")
+
+    def test_fixed_mismatched_lengths_rejected(self):
+        with pytest.raises(WDLError):
+            parse_yaml("""
+t:
+  command: x
+  args:
+    a: [1, 2]
+    b: [1, 2, 3]
+  fixed: [[a, b]]
+""")
+
+    def test_value_type_inference(self):
+        spec = parse_yaml("""
+t:
+  command: x
+  args:
+    i: ["7"]
+    f: ["2.5"]
+    b: ["true"]
+    s: [hello]
+""")
+        p = spec.tasks["t"].parameters()
+        assert p["args:i"] == [7]
+        assert p["args:f"] == [2.5]
+        assert p["args:b"] == [True]
+        assert p["args:s"] == ["hello"]
+
+    def test_merge_multiple_files(self):
+        a = parse_yaml("t:\n  command: run ${args:x}\n  args:\n    x: [1]\n")
+        b = parse_yaml("t:\n  args:\n    y: [2, 3]\n")
+        spec = merge(a, b)
+        p = spec.tasks["t"].parameters()
+        assert set(p) == {"args:x", "args:y"}
+
+    def test_two_level_entries(self):
+        spec = parse_dict({"t": {"command": "x",
+                                 "environ": {"A": [1, 2], "B": 3}}})
+        p = spec.tasks["t"].parameters()
+        assert p["environ:A"] == [1, 2]
+        assert p["environ:B"] == [3]
+
+    def test_reserved_keywords_parsed(self):
+        spec = parse_yaml("""
+t:
+  command: x
+  parallel: mesh-slice
+  batch: grouped
+  nnodes: 4
+  ppnode: 2
+  hosts: [a, b]
+""")
+        t = spec.tasks["t"]
+        assert t.parallel == "mesh-slice"
+        assert t.batch == "grouped"
+        assert (t.nnodes, t.ppnode) == (4, 2)
+        assert t.hosts == ["a", "b"]
