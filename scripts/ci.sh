@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# One-shot local gate: byte-compile everything, then run the tier-1 suite.
+# Usage: scripts/ci.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m compileall -q src benchmarks scripts
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,10 +1,31 @@
 """PaPaS core: parameter-study, workflow, cluster, visualization engines."""
 from .dag import DAGError, TaskDAG, TaskNode
-from .executors import GangExecutor, GangStats, run_subprocess, stackable_key
+from .executors import (
+    CompletionEvent,
+    GangExecutor,
+    GangPool,
+    GangStats,
+    InlinePool,
+    ProcessWorkerPool,
+    ShellResult,
+    ThreadWorkerPool,
+    WorkerPool,
+    make_pool,
+    run_subprocess,
+    stackable_key,
+)
 from .interpolate import InterpolationError, interpolate, render_command, substitute_content
 from .paramspace import ParameterSpace, combo_id, from_task
 from .provenance import StudyDB, config_hash
-from .scheduler import ScheduleEvent, Scheduler, TaskResult, dispatch_count, makespan
+from .scheduler import (
+    ScheduleEvent,
+    Scheduler,
+    TaskResult,
+    VirtualClock,
+    VirtualPool,
+    dispatch_count,
+    makespan,
+)
 from .staging import collect_outputs, stage_instance
 from .state import StudyJournal
 from .study import ParameterStudy, load_study
@@ -25,11 +46,14 @@ from .wdl import (
 
 __all__ = [
     "DAGError", "TaskDAG", "TaskNode",
-    "GangExecutor", "GangStats", "run_subprocess", "stackable_key",
+    "CompletionEvent", "GangExecutor", "GangPool", "GangStats", "InlinePool",
+    "ProcessWorkerPool", "ShellResult", "ThreadWorkerPool", "WorkerPool",
+    "make_pool", "run_subprocess", "stackable_key",
     "InterpolationError", "interpolate", "render_command", "substitute_content",
     "ParameterSpace", "combo_id", "from_task",
     "StudyDB", "config_hash",
-    "ScheduleEvent", "Scheduler", "TaskResult", "dispatch_count", "makespan",
+    "ScheduleEvent", "Scheduler", "TaskResult", "VirtualClock", "VirtualPool",
+    "dispatch_count", "makespan",
     "StudyJournal", "collect_outputs", "stage_instance",
     "ParameterStudy", "load_study",
     "to_ascii", "to_dot",

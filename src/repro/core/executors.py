@@ -1,27 +1,42 @@
-"""Execution backends (paper §4.3 cluster engine, adapted to TPU).
+"""Worker pools — the execution backends behind the unified engine.
 
-The paper's cluster engine groups many small user jobs into one cluster
-allocation (MPI task dispatcher).  On SPMD TPU hardware the same insight
-maps to three backends:
+The scheduler (``repro.core.scheduler``) is a single slot-occupancy event
+loop; everything backend-specific lives here behind the ``WorkerPool``
+interface.  A pool decides *which* ready nodes to claim (``take``), runs
+them (``submit``), and reports completions (``next_event``) — the paper's
+"cluster engine" (§4.3) reduced to three methods.  Backends:
 
-* ``serial``      — one task at a time (the paper's *serial* regime).
-* ``subprocess``  — black-box shell tasks (`command:` keyword), with env
-  propagation; parity with the paper's process dispatcher.
-* ``gang``        — group stackable instances and run each group through
-  a single callable (the vmap-stack / mesh-slice pack).  The JAX-level
-  packing itself lives in ``repro.train.ensemble``; this layer only does
-  the grouping, dispatch accounting, and result scatter.
+* ``InlinePool``   — runs each task synchronously at dispatch time.
+  Fully deterministic; the default for tests and small studies.
+* ``ThreadWorkerPool``  — ``concurrent.futures`` thread pool; real wall-
+  clock parallelism for I/O- and subprocess-bound tasks.
+* ``ProcessWorkerPool`` — process pool for CPU-bound Python tasks
+  (runner and nodes must be picklable).
+* ``GangPool``     — batched dispatch: claims a whole stackability group
+  from the ready queue and launches it as ONE program (the paper's
+  single-cluster-job technique, §4.3).  Wraps a ``GangExecutor``.
+
+``run_subprocess`` runs black-box shell tasks and always returns a
+``ShellResult`` — a nonzero exit is *data*, classified by the scheduler's
+retry/failure-closure logic (respecting the task's ``allow_nonzero``
+keyword), not an exception.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
+import queue
 import shlex
 import subprocess
 import time
-from typing import Any, Callable, Hashable, Mapping, Sequence
+from collections import deque
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+from typing import Any, Callable, Hashable, Mapping, Sequence, TYPE_CHECKING
 
 from .dag import TaskNode
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .dag import TaskDAG
 
 
 @dataclasses.dataclass
@@ -30,6 +45,10 @@ class ShellResult:
     stdout: str
     stderr: str
     runtime: float
+
+    @property
+    def ok(self) -> bool:
+        return self.returncode == 0
 
 
 def run_subprocess(
@@ -40,7 +59,15 @@ def run_subprocess(
 ) -> ShellResult:
     """Run one black-box task; measures runtime (the paper's task
     profiler: "the application is not mandated to have an internal
-    timer")."""
+    timer").
+
+    Always returns a ``ShellResult`` — including on nonzero exit.  The
+    scheduler classifies the returncode (see ``Scheduler._classify``),
+    so retries and failure closure apply uniformly to shell tasks.  A
+    ``timeout`` propagates to ``subprocess.run``; expiry raises
+    ``subprocess.TimeoutExpired``, which the scheduler records as a
+    failed attempt.
+    """
     full_env = dict(os.environ)
     if env:
         full_env.update({k: str(v) for k, v in env.items()})
@@ -55,11 +82,177 @@ def run_subprocess(
         check=False,
     )
     t1 = time.monotonic()
-    if proc.returncode != 0:
-        raise RuntimeError(
-            f"command failed ({proc.returncode}): {command!r}\n{proc.stderr[-2000:]}"
-        )
     return ShellResult(proc.returncode, proc.stdout, proc.stderr, t1 - t0)
+
+
+# ---------------------------------------------------------------------------
+# Worker pools
+# ---------------------------------------------------------------------------
+
+#: runner signature shared by every pool: one node in, one value out.
+Runner = Callable[[TaskNode], Any]
+
+
+@dataclasses.dataclass
+class CompletionEvent:
+    """One finished dispatch: per-node outcomes plus true start/stop."""
+
+    token: int
+    values: list[Any]             # aligned with the dispatched nodes
+    errors: list[str | None]      # non-None marks that node's attempt failed
+    started: float
+    finished: float
+
+
+def _run_nodes(runner: Runner, nodes: Sequence[TaskNode]
+               ) -> tuple[list[Any], list[str | None], float, float]:
+    """Worker-side body: run each node, capture per-node exceptions, and
+    measure true occupancy with a clock local to the worker."""
+    t0 = time.monotonic()
+    values: list[Any] = []
+    errors: list[str | None] = []
+    for node in nodes:
+        try:
+            values.append(runner(node))
+            errors.append(None)
+        except Exception as e:  # noqa: BLE001 — fault isolation
+            values.append(None)
+            errors.append(f"{type(e).__name__}: {e}")
+    t1 = time.monotonic()
+    return values, errors, t0, t1
+
+
+class WorkerPool:
+    """Backend interface for the scheduler's event loop."""
+
+    kind = "base"
+
+    def take(self, ready: list[str], dag: "TaskDAG") -> list[str]:
+        """Claim the next batch of node ids from the (sorted) ready
+        queue, removing them.  Default: one node per dispatch."""
+        return [ready.pop(0)]
+
+    def submit(self, token: int, runner: Runner | None,
+               nodes: Sequence[TaskNode]) -> None:
+        raise NotImplementedError
+
+    def next_event(self, timeout: float | None = None) -> CompletionEvent | None:
+        """Block for the next completion; ``None`` signals the timeout
+        elapsed (the loop then checks deadlines and stragglers)."""
+        raise NotImplementedError
+
+    def shutdown(self) -> None:
+        pass
+
+    def __enter__(self) -> "WorkerPool":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.shutdown()
+
+
+class _SyncPool(WorkerPool):
+    """Base for synchronous backends: ``submit`` runs the batch in place
+    and queues its event, so completions arrive in dispatch order."""
+
+    def __init__(self) -> None:
+        self._events: deque[CompletionEvent] = deque()
+
+    def _run_batch(self, runner: Runner | None, nodes: Sequence[TaskNode]
+                   ) -> tuple[list[Any], list[str | None], float, float]:
+        raise NotImplementedError
+
+    def submit(self, token: int, runner: Runner | None,
+               nodes: Sequence[TaskNode]) -> None:
+        values, errors, t0, t1 = self._run_batch(runner, nodes)
+        self._events.append(CompletionEvent(token, values, errors, t0, t1))
+
+    def next_event(self, timeout: float | None = None) -> CompletionEvent | None:
+        return self._events.popleft() if self._events else None
+
+
+class InlinePool(_SyncPool):
+    """Synchronous per-node backend — deterministic; the default."""
+
+    kind = "inline"
+
+    def _run_batch(self, runner: Runner | None, nodes: Sequence[TaskNode]):
+        return _run_nodes(runner, nodes)
+
+
+class _FuturePool(WorkerPool):
+    """Shared machinery for executor-backed pools: completions funnel
+    through a queue fed by done-callbacks."""
+
+    def __init__(self, slots: int) -> None:
+        if slots < 1:
+            raise ValueError("slots must be >= 1")
+        self.slots = slots
+        self._q: "queue.Queue[CompletionEvent]" = queue.Queue()
+        self._ex = self._make_executor(slots)
+
+    def _make_executor(self, slots: int):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def submit(self, token: int, runner: Runner | None,
+               nodes: Sequence[TaskNode]) -> None:
+        fut = self._ex.submit(_run_nodes, runner, list(nodes))
+        n = len(nodes)
+        fut.add_done_callback(lambda f, t=token, k=n: self._collect(t, k, f))
+
+    def _collect(self, token: int, n: int, fut: Any) -> None:
+        if fut.cancelled():
+            return      # shutdown cancelled it before it ever ran
+        exc = fut.exception()
+        if exc is not None:
+            now = time.monotonic()
+            msg = f"{type(exc).__name__}: {exc}"
+            ev = CompletionEvent(token, [None] * n, [msg] * n, now, now)
+        else:
+            values, errors, t0, t1 = fut.result()
+            ev = CompletionEvent(token, values, errors, t0, t1)
+        self._q.put(ev)
+
+    def next_event(self, timeout: float | None = None) -> CompletionEvent | None:
+        try:
+            return self._q.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def shutdown(self) -> None:
+        self._ex.shutdown(wait=False, cancel_futures=True)
+
+
+class ThreadWorkerPool(_FuturePool):
+    """Thread-pool backend: true wall-clock overlap for subprocess- and
+    I/O-bound tasks (and anything releasing the GIL)."""
+
+    kind = "thread"
+
+    def _make_executor(self, slots: int) -> ThreadPoolExecutor:
+        return ThreadPoolExecutor(max_workers=slots,
+                                  thread_name_prefix="papas-slot")
+
+
+class ProcessWorkerPool(_FuturePool):
+    """Process-pool backend for CPU-bound Python tasks.  The runner and
+    every node (including payloads) must be picklable."""
+
+    kind = "process"
+
+    def _make_executor(self, slots: int) -> ProcessPoolExecutor:
+        return ProcessPoolExecutor(max_workers=slots)
+
+
+def make_pool(kind: str, slots: int = 1) -> WorkerPool:
+    """Construct a pool by name: ``inline``, ``thread``, or ``process``."""
+    if kind == "inline":
+        return InlinePool()
+    if kind == "thread":
+        return ThreadWorkerPool(slots)
+    if kind == "process":
+        return ProcessWorkerPool(slots)
+    raise ValueError(f"unknown pool kind {kind!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -95,7 +288,20 @@ class GangExecutor:
         self.max_group = max_group
         self.stats = GangStats()
 
+    def run_group(self, chunk: Sequence[TaskNode]) -> list[Any]:
+        """Dispatch one stackable chunk as a single program launch."""
+        values = list(self.gang_runner(chunk))
+        if len(values) != len(chunk):
+            raise RuntimeError(
+                f"gang runner returned {len(values)} results for "
+                f"{len(chunk)} tasks")
+        self.stats.groups += 1
+        self.stats.dispatches += 1
+        self.stats.tasks += len(chunk)
+        return values
+
     def run(self, nodes: Sequence[TaskNode]) -> dict[str, Any]:
+        """Group and dispatch a node set directly (no scheduler)."""
         groups: dict[Hashable, list[TaskNode]] = {}
         for n in nodes:
             groups.setdefault(self.group_key(n), []).append(n)
@@ -107,17 +313,46 @@ class GangExecutor:
                 if self.max_group else [members]
             )
             for chunk in chunks:
-                values = self.gang_runner(chunk)
-                if len(values) != len(chunk):
-                    raise RuntimeError(
-                        f"gang runner returned {len(values)} results for "
-                        f"{len(chunk)} tasks")
-                for node, value in zip(chunk, values):
+                for node, value in zip(chunk, self.run_group(chunk)):
                     results[node.id] = value
-                self.stats.groups += 1
-                self.stats.dispatches += 1
-                self.stats.tasks += len(chunk)
         return results
+
+
+class GangPool(_SyncPool):
+    """Gang dispatch as a pool policy: ``take`` claims an entire
+    stackability group from the ready queue and ``submit`` launches it as
+    one program.  Replaces the old separate level-synchronous loop — gang
+    studies now share the scheduler's retry/closure/journal machinery."""
+
+    kind = "gang"
+
+    def __init__(self, gang: GangExecutor) -> None:
+        super().__init__()
+        self.gang = gang
+
+    def take(self, ready: list[str], dag: "TaskDAG") -> list[str]:
+        groups: dict[str, list[str]] = {}
+        for nid in ready:
+            groups.setdefault(str(self.gang.group_key(dag.nodes[nid])),
+                              []).append(nid)
+        members = groups[sorted(groups)[0]]
+        if self.gang.max_group:
+            members = members[: self.gang.max_group]
+        for nid in members:
+            ready.remove(nid)
+        return members
+
+    def _run_batch(self, runner: Runner | None, nodes: Sequence[TaskNode]):
+        t0 = time.monotonic()
+        try:
+            values = self.gang.run_group(nodes)
+            errors: list[str | None] = [None] * len(nodes)
+        except Exception as e:  # noqa: BLE001 — whole-batch failure
+            msg = f"{type(e).__name__}: {e}"
+            values = [None] * len(nodes)
+            errors = [msg] * len(nodes)
+        t1 = time.monotonic()
+        return values, errors, t0, t1
 
 
 def stackable_key(node: TaskNode) -> Hashable:

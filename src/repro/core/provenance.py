@@ -11,6 +11,7 @@ import dataclasses
 import hashlib
 import json
 import os
+import threading
 import time
 from pathlib import Path
 from typing import Any, Iterator, Mapping
@@ -29,6 +30,18 @@ class StudyDB:
         self.dir.mkdir(parents=True, exist_ok=True)
         self.records_path = self.dir / "records.jsonl"
         self.meta_path = self.dir / "study.json"
+        self._lock = threading.Lock()
+
+    # the DB rides along when a bound runner is pickled to a process
+    # pool; the lock is process-local state
+    def __getstate__(self) -> dict:
+        state = self.__dict__.copy()
+        del state["_lock"]
+        return state
+
+    def __setstate__(self, state: dict) -> None:
+        self.__dict__.update(state)
+        self._lock = threading.Lock()
 
     # -- study-level metadata -------------------------------------------
     def write_meta(self, meta: Mapping[str, Any]) -> None:
@@ -61,8 +74,9 @@ class StudyDB:
             "timestamp": time.time(),
             **extra,
         }
-        with self.records_path.open("a") as f:
-            f.write(json.dumps(rec, default=str) + "\n")
+        line = json.dumps(rec, default=str) + "\n"
+        with self._lock, self.records_path.open("a") as f:
+            f.write(line)
 
     def records(self) -> Iterator[dict[str, Any]]:
         if not self.records_path.exists():

@@ -1,24 +1,54 @@
-"""Task scheduling (paper §4.2/§4.3).
+"""The unified execution engine (paper §4.2/§4.3).
 
-Two modes share one ready-queue engine:
+One slot-occupancy event loop drives every execution mode.  The loop
+keeps a sorted ready queue over the task DAG, dispatches batches onto
+numbered slots claimed from a ``WorkerPool`` backend, then blocks on the
+pool's completion stream — handling retries, failure closure, per-task
+timeouts, and speculative straggler duplicates as events arrive in *any*
+order.  The three historical code paths are now configurations of this
+single loop:
 
-* **execute** — run node payloads (callables) on a bounded pool of
-  "slots" (the analogue of `nnodes × ppnode`), with retries, failure
-  isolation, straggler detection, and checkpoint journaling.
-* **simulate** — given per-node durations, compute start/stop times under
-  a submission/scheduling policy.  This reproduces the paper's Fig. 1
-  regimes (*optimal*, *serial*, *common*) and the Fig. 3/4 grouping
-  comparison without wall-clock waiting.
+* **execute** — live runs on a pluggable backend (``InlinePool`` for
+  determinism, ``ThreadWorkerPool``/``ProcessWorkerPool`` for real
+  parallelism, ``GangPool`` for batched dispatch).  ``TaskResult.slot``
+  is the real slot the task occupied; ``started``/``finished`` are true
+  per-slot occupancy times measured by the backend.
+* **simulate** — the same loop over a ``VirtualPool`` event source that
+  advances an injected virtual clock instead of waiting, reproducing the
+  paper's Fig. 1 regimes (*optimal*, *serial*, *common*, *grouped*) and
+  the Fig. 3/4 grouping comparison with zero wall-clock cost.
+* **gang** — ``ParameterStudy.run(gang=...)`` routes through the same
+  loop with a ``GangPool``, so batched dispatch shares the retry,
+  closure, and journal machinery.
+
+Concurrency-relevant semantics:
+
+* a node failing after ``max_retries`` re-dispatches marks its whole
+  transitive successor closure ``skipped`` (fault isolation, §4.1);
+* a per-node ``timeout`` (from the WDL ``timeout`` keyword, carried in
+  ``node.payload``) bounds each attempt; a gang batch gets the *sum* of
+  its members' timeouts as its wall-clock budget (one launch hosting N
+  tasks earns N tasks' allowance).  Overdue dispatches are failed and
+  their late completions discarded — the slot stays occupied until the
+  zombie worker actually finishes, so queued work never times out
+  behind it;
+* with ``speculate=True``, a running task whose elapsed time exceeds
+  ``straggler_factor ×`` the median completed runtime gets a duplicate
+  dispatch; the first finisher wins (``TaskResult.speculative`` marks a
+  duplicate win) and the loser is abandoned.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
+import itertools
 import random
 import time
 from typing import Any, Callable, Mapping
 
 from .dag import TaskDAG, TaskNode
+from .executors import CompletionEvent, InlinePool, WorkerPool
 
 
 @dataclasses.dataclass
@@ -31,8 +61,8 @@ class TaskResult:
     attempts: int = 1
     value: Any = None
     error: str | None = None
-    slot: int = -1
-    speculative: bool = False
+    slot: int = -1              # real slot occupied (execute and simulate)
+    speculative: bool = False   # won by a speculative duplicate dispatch
 
 
 @dataclasses.dataclass
@@ -45,8 +75,90 @@ class ScheduleEvent:
     stop: float
 
 
+class VirtualClock:
+    """Injectable event-time source for wall-clock-free simulation."""
+
+    def __init__(self, start: float = 0.0) -> None:
+        self.now = start
+
+    def __call__(self) -> float:
+        return self.now
+
+
+class VirtualPool(WorkerPool):
+    """Virtual-time backend: completions come from a duration table (or
+    ``fn(node_id, n_prior_dispatches)``) ordered on a min-heap, and
+    ``next_event`` advances the injected clock to each finish time.
+    With ``call_runner=True`` the runner still executes (instantly in
+    virtual time) so tests can exercise real failure paths under a
+    deterministic fake clock."""
+
+    kind = "virtual"
+
+    def __init__(
+        self,
+        durations: Mapping[str, float] | Callable[[str, int], float],
+        clock: VirtualClock,
+        delay_fn: Callable[[], float] | None = None,
+        call_runner: bool = False,
+    ) -> None:
+        self.durations = durations
+        self.clock = clock
+        self.delay_fn = delay_fn
+        self.call_runner = call_runner
+        self._heap: list[tuple[float, int, int, float, Any, str | None]] = []
+        self._seq = 0
+        self._dispatched: dict[str, int] = {}
+
+    def _duration(self, nid: str) -> float:
+        k = self._dispatched.get(nid, 0)
+        self._dispatched[nid] = k + 1
+        if callable(self.durations):
+            return float(self.durations(nid, k))
+        return float(self.durations[nid])
+
+    def submit(self, token: int, runner: Any,
+               nodes: list[TaskNode]) -> None:
+        (node,) = nodes   # virtual dispatch is per-node
+        start = self.clock.now + (self.delay_fn() if self.delay_fn else 0.0)
+        stop = start + self._duration(node.id)
+        value, error = None, None
+        if self.call_runner and runner is not None:
+            try:
+                value = runner(node)
+            except Exception as e:  # noqa: BLE001
+                error = f"{type(e).__name__}: {e}"
+        heapq.heappush(self._heap,
+                       (stop, self._seq, token, start, value, error))
+        self._seq += 1
+
+    def next_event(self, timeout: float | None = None) -> CompletionEvent | None:
+        if not self._heap:
+            return None
+        if timeout is not None and self._heap[0][0] > self.clock.now + timeout:
+            self.clock.now += timeout   # sleep through a quiet interval
+            return None
+        stop, _, token, start, value, error = heapq.heappop(self._heap)
+        if stop > self.clock.now:
+            self.clock.now = stop
+        return CompletionEvent(token, [value], [error], start, stop)
+
+
+@dataclasses.dataclass
+class _Dispatch:
+    """One in-flight batch occupying a slot."""
+
+    token: int
+    nids: list[str]
+    slot: int
+    dispatched: float           # engine clock at submit
+    budget: float | None        # wall-clock allowance for the whole batch
+    deadline: float | None      # dispatched + budget
+    speculative: bool
+
+
 class Scheduler:
-    """Ready-queue scheduler over a TaskDAG."""
+    """Slot-occupancy event loop over a TaskDAG."""
 
     def __init__(
         self,
@@ -55,10 +167,14 @@ class Scheduler:
         straggler_factor: float = 3.0,
         clock: Callable[[], float] = time.monotonic,
         order: str = "breadth",
+        speculate: bool = False,
     ) -> None:
         """``order``: "breadth" finishes each task level across all
         workflow instances first; "depth" completes one instance's whole
-        task chain before starting the next (paper §9 future work)."""
+        task chain before starting the next (paper §9 future work).
+        ``speculate``: launch a duplicate of any running task slower than
+        ``straggler_factor ×`` the median runtime (≥ 5 samples) when a
+        slot is idle; only enable for idempotent runners."""
         if slots < 1:
             raise ValueError("slots must be >= 1")
         if order not in ("breadth", "depth"):
@@ -68,42 +184,98 @@ class Scheduler:
         self.straggler_factor = straggler_factor
         self.clock = clock
         self.order = order
+        self.speculate = speculate
+
+    # ------------------------------------------------------------------
+    def _order_key(self, nid: str) -> tuple[str, ...]:
+        if self.order == "depth":
+            # instance-major: ids are "<task>@<combo>" — sort by combo
+            # first so one workflow finishes before the next
+            return (nid.split("@")[-1], nid)
+        return (nid,)
+
+    def _sort_ready(self, ready: list[str]) -> None:
+        ready.sort(key=self._order_key)
+
+    @staticmethod
+    def _payload(node: TaskNode) -> Mapping[str, Any]:
+        return node.payload if isinstance(node.payload, Mapping) else {}
+
+    @classmethod
+    def _classify(cls, node: TaskNode, value: Any) -> str | None:
+        """Post-completion failure classification: a ShellResult-like
+        value with a nonzero returncode fails the attempt unless the task
+        sets ``allow_nonzero``."""
+        rc = getattr(value, "returncode", None)
+        if isinstance(rc, int) and rc != 0:
+            if not cls._payload(node).get("allow_nonzero"):
+                stderr = (getattr(value, "stderr", "") or "")[-2000:]
+                return f"nonzero exit {rc}: {stderr}"
+        return None
 
     # ------------------------------------------------------------------
     def execute(
         self,
         dag: TaskDAG,
-        runner: Callable[[TaskNode], Any],
+        runner: Callable[[TaskNode], Any] | None,
         completed: set[str] | None = None,
         on_result: Callable[[TaskResult], None] | None = None,
+        pool: WorkerPool | None = None,
     ) -> dict[str, TaskResult]:
         """Run every node once its deps are satisfied.
 
         ``completed`` marks nodes already finished (checkpoint restart):
         they are skipped and treated as satisfied dependencies.  Failed
-        nodes are retried up to ``max_retries`` times; their transitive
-        successors are marked ``skipped`` rather than aborting the study
-        (fault isolation, paper §4.1 checkpoint-restart semantics).
+        attempts are retried up to ``max_retries`` times; nodes failing
+        for good have their transitive successors marked ``skipped``
+        rather than aborting the study (fault isolation, paper §4.1).
+        ``pool`` selects the backend (default: a fresh ``InlinePool``);
+        ``on_result`` fires on the event-loop thread as nodes resolve.
         """
         dag.validate()
         completed = set(completed or ())
-        succ = dag.successors()
-        indeg = {nid: len(n.deps) for nid, n in dag.nodes.items()}
-        results: dict[str, TaskResult] = {}
-        runtimes: list[float] = []
+        own_pool = pool is None
+        if pool is None:
+            pool = InlinePool()
+        try:
+            return self._event_loop(dag, runner, completed, on_result, pool)
+        finally:
+            if own_pool:
+                pool.shutdown()
 
-        ready = [nid for nid, n in dag.nodes.items()
-                 if all(d in completed for d in n.deps)]
-        # nodes whose deps are already checkpoint-complete but are
-        # themselves complete get skipped outright
+    # ------------------------------------------------------------------
+    def _event_loop(
+        self,
+        dag: TaskDAG,
+        runner: Callable[[TaskNode], Any] | None,
+        completed: set[str],
+        on_result: Callable[[TaskResult], None] | None,
+        pool: WorkerPool,
+    ) -> dict[str, TaskResult]:
+        succ = dag.successors()
+        indeg = {nid: sum(1 for d in n.deps if d not in completed)
+                 for nid, n in dag.nodes.items()}
+        results: dict[str, TaskResult] = {}
         for nid in sorted(dag.nodes):
             if nid in completed:
                 results[nid] = TaskResult(
                     id=nid, status="ok", runtime=0.0, started=0.0,
                     finished=0.0, attempts=0, value=None)
-        ready = sorted(set(ready) - completed)
+
+        ready = [nid for nid in dag.nodes
+                 if nid not in completed and indeg[nid] == 0]
+        self._sort_ready(ready)
 
         failed_closure: set[str] = set()
+        attempts: dict[str, int] = {}
+        first_started: dict[str, float] = {}
+        runtimes: list[float] = []
+        free: list[int] = list(range(self.slots))
+        heapq.heapify(free)
+        running: dict[int, _Dispatch] = {}
+        live_tokens: dict[str, set[int]] = {}   # node id → in-flight tokens
+        abandoned: dict[int, int] = {}          # zombie token → held slot
+        tokens = itertools.count()
 
         def _mark_failed_closure(root: str) -> None:
             stack = [root]
@@ -114,66 +286,179 @@ class Scheduler:
                         failed_closure.add(s)
                         stack.append(s)
 
-        pending = set(dag.nodes) - completed
-        while ready or pending - set(results):
-            if not ready:
-                # nothing ready but work pending → only failed-closure left
-                remaining = sorted(pending - set(results))
-                for nid in remaining:
-                    results[nid] = TaskResult(
-                        id=nid, status="skipped", runtime=0.0,
-                        started=self.clock(), finished=self.clock(),
-                        error="dependency failed")
-                break
-            nid = ready.pop(0)
-            node = dag.nodes[nid]
-            if nid in failed_closure:
-                results[nid] = TaskResult(
-                    id=nid, status="skipped", runtime=0.0,
-                    started=self.clock(), finished=self.clock(),
-                    error="dependency failed")
-            else:
-                attempts = 0
-                last_err: str | None = None
-                value: Any = None
-                t0 = self.clock()
-                while attempts <= self.max_retries:
-                    attempts += 1
-                    try:
-                        value = runner(node)
-                        last_err = None
-                        break
-                    except Exception as e:  # noqa: BLE001 — fault isolation
-                        last_err = f"{type(e).__name__}: {e}"
-                t1 = self.clock()
-                if last_err is None:
-                    rt = t1 - t0
-                    runtimes.append(rt)
-                    med = sorted(runtimes)[len(runtimes) // 2]
-                    res = TaskResult(
-                        id=nid, status="ok", runtime=rt, started=t0,
-                        finished=t1, attempts=attempts, value=value)
-                    if med > 0 and rt > self.straggler_factor * med and len(runtimes) >= 5:
-                        res.speculative = True  # flagged straggler
-                    results[nid] = res
-                else:
-                    results[nid] = TaskResult(
-                        id=nid, status="failed", runtime=t1 - t0, started=t0,
-                        finished=t1, attempts=attempts, error=last_err)
-                    _mark_failed_closure(nid)
+        def _resolve(res: TaskResult) -> None:
+            results[res.id] = res
+            if res.status == "ok":
+                runtimes.append(res.runtime)
             if on_result:
-                on_result(results[nid])
-            # release successors
-            for s in succ[nid]:
+                on_result(res)
+            for s in succ[res.id]:
                 indeg[s] -= 1
                 if indeg[s] == 0 and s not in results:
-                    ready.append(s)
-            if self.order == "depth":
-                # instance-major: ids are "<task>@<combo>" — sort by
-                # combo first so one workflow finishes before the next
-                ready.sort(key=lambda i: (i.split("@")[-1], i))
+                    bisect.insort(ready, s, key=self._order_key)
+
+        def _abandon(token: int) -> None:
+            # The worker may still be busy: the slot stays occupied until
+            # the abandoned dispatch's completion event actually arrives,
+            # so later work never queues behind a zombie and times out.
+            d = running.pop(token, None)
+            if d is None:
+                return
+            abandoned[token] = d.slot
+            for nid in d.nids:
+                live_tokens.get(nid, set()).discard(token)
+
+        def _skip(nid: str) -> None:
+            now = self.clock()
+            _resolve(TaskResult(
+                id=nid, status="skipped", runtime=0.0, started=now,
+                finished=now, error="dependency failed"))
+
+        def _dispatch(nids: list[str], speculative: bool) -> None:
+            nodes = [dag.nodes[n] for n in nids]
+            token = next(tokens)
+            slot = heapq.heappop(free)
+            now = self.clock()
+            # the batch budget is the sum of member timeouts: a gang
+            # launch hosting N tasks gets N tasks' worth of wall clock.
+            # A member without a timeout leaves the batch unbounded.
+            tmos = [self._payload(n).get("timeout") for n in nodes]
+            budget = (sum(float(t) for t in tmos)
+                      if tmos and all(t for t in tmos) else None)
+            deadline = now + budget if budget else None
+            if not speculative:
+                for nid in nids:
+                    attempts[nid] = attempts.get(nid, 0) + 1
+            for nid in nids:
+                live_tokens.setdefault(nid, set()).add(token)
+            running[token] = _Dispatch(token, nids, slot, now, budget,
+                                       deadline, speculative)
+            pool.submit(token, runner, nodes)
+
+        def _handle_outcome(d: _Dispatch, nid: str, value: Any,
+                            error: str | None, started: float,
+                            finished: float) -> None:
+            live_tokens.get(nid, set()).discard(d.token)
+            if nid in results:      # duplicate copy lost the race
+                return
+            node = dag.nodes[nid]
+            if (error is None and d.budget
+                    and (finished - started) > d.budget):
+                error = (f"timeout: attempt ran {finished - started:.3f}s, "
+                         f"budget {d.budget}s")
+            if error is None:
+                error = self._classify(node, value)
+            if error is not None and d.speculative:
+                return              # failed duplicate: primary still runs
+            fs = first_started.setdefault(nid, started)
+            if error is not None and attempts.get(nid, 0) <= self.max_retries:
+                bisect.insort(ready, nid, key=self._order_key)  # retry
+                return
+            for t in list(live_tokens.get(nid, ())):
+                _abandon(t)         # first finisher wins; drop other copies
+            if error is not None:
+                _mark_failed_closure(nid)
+                _resolve(TaskResult(
+                    id=nid, status="failed", runtime=finished - fs,
+                    started=fs, finished=finished,
+                    attempts=attempts.get(nid, 1), error=error, slot=d.slot))
             else:
-                ready.sort()
+                _resolve(TaskResult(
+                    id=nid, status="ok", runtime=finished - fs, started=fs,
+                    finished=finished, attempts=attempts.get(nid, 1),
+                    value=value, slot=d.slot, speculative=d.speculative))
+
+        def _expire(d: _Dispatch, now: float) -> None:
+            _abandon(d.token)
+            limit = (d.deadline or now) - d.dispatched
+            for nid in d.nids:
+                _handle_outcome(d, nid, None,
+                                f"timeout: no completion within {limit:.3f}s",
+                                d.dispatched, now)
+
+        def _median_runtime() -> float | None:
+            if len(runtimes) < 5:
+                return None
+            med = sorted(runtimes)[len(runtimes) // 2]
+            return med if med > 0 else None
+
+        while len(results) < len(dag.nodes):
+            # resolve failure-closure nodes without occupying slots
+            while True:
+                doomed = [nid for nid in ready if nid in failed_closure]
+                ready[:] = [nid for nid in ready
+                            if nid not in failed_closure and nid not in results]
+                if not doomed:
+                    break
+                for nid in doomed:
+                    if nid not in results:
+                        _skip(nid)
+
+            while free and ready:
+                batch = pool.take(ready, dag)
+                if not batch:
+                    break
+                _dispatch(batch, speculative=False)
+
+            # speculative straggler duplicates on leftover slots
+            med = _median_runtime() if self.speculate else None
+            if med is not None and free:
+                now = self.clock()
+                for d in list(running.values()):
+                    if not free:
+                        break
+                    if d.speculative or len(d.nids) != 1:
+                        continue
+                    nid = d.nids[0]
+                    if len(live_tokens.get(nid, ())) > 1:
+                        continue    # already duplicated
+                    if now - d.dispatched >= self.straggler_factor * med:
+                        _dispatch([nid], speculative=True)
+
+            if not running and not abandoned:
+                if ready:
+                    continue
+                # nothing running or ready → remaining deps unsatisfiable
+                for nid in sorted(set(dag.nodes) - set(results)):
+                    if nid not in results:
+                        _skip(nid)
+                break
+
+            # expire overdue dispatches before (and instead of) waiting
+            now = self.clock()
+            overdue = [d for d in running.values()
+                       if d.deadline is not None and now >= d.deadline]
+            if overdue:
+                for d in overdue:
+                    _expire(d, now)
+                continue
+
+            wait: float | None = None
+            horizons = [d.deadline for d in running.values()
+                        if d.deadline is not None]
+            if med is not None:
+                horizons += [
+                    d.dispatched + self.straggler_factor * med
+                    for d in running.values()
+                    if not d.speculative and len(d.nids) == 1
+                    and len(live_tokens.get(d.nids[0], ())) == 1]
+            future = [h for h in horizons if h > now]
+            if future:
+                wait = max(1e-4, min(future) - now)
+
+            ev = pool.next_event(wait)
+            if ev is None:
+                continue            # re-check deadlines / stragglers
+            if ev.token in abandoned:
+                # late completion of a loser/expired copy: the worker is
+                # finally idle, so its slot returns to service only now
+                heapq.heappush(free, abandoned.pop(ev.token))
+                continue
+            d = running.pop(ev.token)
+            heapq.heappush(free, d.slot)
+            for nid, value, error in zip(d.nids, ev.values, ev.errors):
+                _handle_outcome(d, nid, value, error, ev.started, ev.finished)
+
         return results
 
     # ------------------------------------------------------------------
@@ -185,7 +470,9 @@ class Scheduler:
         seed: int = 0,
         queue_delay: float = 0.0,
     ) -> list[ScheduleEvent]:
-        """Event-driven simulation of the paper's Fig. 1 regimes.
+        """Virtual-clock run of the paper's Fig. 1 regimes on the same
+        event loop as ``execute`` (a ``VirtualPool`` replaces the live
+        backend, so policy orderings carry over to real runs).
 
         * ``optimal`` — as many slots as jobs; all start at t=0.
         * ``serial``  — one slot, back-to-back.
@@ -195,33 +482,28 @@ class Scheduler:
           batched dispatch: one cluster job hosts all tasks).
         """
         dag.validate()
-        order = [n.id for n in dag.topological()]
-        rng = random.Random(seed)
         nslots = {
-            "optimal": max(1, len(order)),
+            "optimal": max(1, len(dag.nodes)),
             "serial": 1,
             "common": self.slots,
             "grouped": self.slots,
         }.get(policy)
         if nslots is None:
             raise ValueError(f"unknown policy {policy!r}")
-        finish: dict[str, float] = {}
-        events: list[ScheduleEvent] = []
-        # slot heap: (free_at, slot_id)
-        heap = [(0.0, s) for s in range(nslots)]
-        heapq.heapify(heap)
-        for nid in order:
-            node = dag.nodes[nid]
-            dep_ready = max((finish[d] for d in node.deps), default=0.0)
-            free_at, slot = heapq.heappop(heap)
-            start = max(dep_ready, free_at)
-            if policy == "common":
-                # scheduler interaction cost per dispatch + jitter
-                start += queue_delay + rng.expovariate(1.0) * queue_delay
-            stop = start + float(durations[nid])
-            finish[nid] = stop
-            events.append(ScheduleEvent(id=nid, slot=slot, start=start, stop=stop))
-            heapq.heappush(heap, (stop, slot))
+        rng = random.Random(seed)
+        delay_fn = None
+        if policy == "common":
+            # scheduler interaction cost per dispatch + jitter
+            delay_fn = lambda: queue_delay + rng.expovariate(1.0) * queue_delay  # noqa: E731
+        clock = VirtualClock()
+        pool = VirtualPool(durations, clock, delay_fn=delay_fn)
+        engine = Scheduler(slots=nslots, max_retries=0, clock=clock,
+                           order="breadth")
+        results = engine.execute(dag, runner=None, pool=pool)
+        events = [ScheduleEvent(id=r.id, slot=r.slot, start=r.started,
+                                stop=r.finished)
+                  for r in results.values()]
+        events.sort(key=lambda e: (e.start, e.id))
         return events
 
 

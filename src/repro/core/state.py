@@ -4,15 +4,19 @@
 deliberate pause/stop operation.  A parameter study's state can be saved
 in a workflow file and reloaded at a later time."
 
-The journal is a JSON file: the study's expanded instance list plus the
-set of completed instance ids.  `resume()` rebuilds exactly the pending
-portion of the study.  Writes are atomic (tmp + rename) so a crash never
-corrupts the journal.
+The journal is a JSON base document (the study's expanded instance list
+plus the completions known when it was written) and an append-only
+sidecar log of task ids completed since.  Recording one completion is an
+O(1) append — not a full rewrite of the study state — so journaling
+stays cheap for long sweeps and safe when results arrive from a
+concurrent engine (a lock serializes writers; base writes stay atomic
+via tmp + rename).  ``load()`` folds the log back into the base.
 """
 from __future__ import annotations
 
 import json
 import os
+import threading
 from pathlib import Path
 from typing import Any, Mapping
 
@@ -20,15 +24,29 @@ from typing import Any, Mapping
 class StudyJournal:
     def __init__(self, path: str | Path) -> None:
         self.path = Path(path)
+        self.log_path = self.path.with_name(self.path.name + ".log")
+        self._lock = threading.Lock()
 
     def exists(self) -> bool:
         return self.path.exists()
 
-    def save(
+    # journals ride along when a bound runner is pickled to a process
+    # pool; the lock is process-local state
+    def __getstate__(self) -> dict:
+        state = self.__dict__.copy()
+        del state["_lock"]
+        return state
+
+    def __setstate__(self, state: dict) -> None:
+        self.__dict__.update(state)
+        self._lock = threading.Lock()
+
+    # -- base document ---------------------------------------------------
+    def _write_base(
         self,
         instances: list[dict[str, Any]],
         completed: set[str],
-        meta: Mapping[str, Any] | None = None,
+        meta: Mapping[str, Any] | None,
     ) -> None:
         doc = {
             "version": 1,
@@ -40,18 +58,41 @@ class StudyJournal:
         self.path.parent.mkdir(parents=True, exist_ok=True)
         tmp.write_text(json.dumps(doc, default=str))
         os.replace(tmp, self.path)
+        # the log's entries are folded into the base we just wrote
+        if self.log_path.exists():
+            self.log_path.unlink()
 
-    def load(self) -> tuple[list[dict[str, Any]], set[str], dict[str, Any]]:
-        doc = json.loads(self.path.read_text())
-        if doc.get("version") != 1:
-            raise ValueError(f"unsupported journal version {doc.get('version')!r}")
-        return doc["instances"], set(doc["completed"]), doc.get("meta", {})
+    def save(
+        self,
+        instances: list[dict[str, Any]],
+        completed: set[str],
+        meta: Mapping[str, Any] | None = None,
+    ) -> None:
+        """Write (compact) the full study state atomically."""
+        with self._lock:
+            self._write_base(instances, completed, meta)
 
     def mark_complete(self, task_id: str) -> None:
-        """Incrementally record completion (cheap append-style update)."""
-        if self.path.exists():
-            instances, completed, meta = self.load()
-        else:
-            instances, completed, meta = [], set(), {}
-        completed.add(task_id)
-        self.save(instances, completed, meta)
+        """Incrementally record one completion: an O(1) locked append to
+        the sidecar log, never a rewrite of the base document."""
+        with self._lock:
+            if not self.path.exists():
+                self._write_base([], set(), {})
+            with self.log_path.open("a") as f:
+                f.write(json.dumps({"completed": task_id}) + "\n")
+                f.flush()
+
+    def load(self) -> tuple[list[dict[str, Any]], set[str], dict[str, Any]]:
+        with self._lock:
+            doc = json.loads(self.path.read_text())
+            if doc.get("version") != 1:
+                raise ValueError(
+                    f"unsupported journal version {doc.get('version')!r}")
+            completed = set(doc["completed"])
+            if self.log_path.exists():
+                with self.log_path.open() as f:
+                    for line in f:
+                        line = line.strip()
+                        if line:
+                            completed.add(json.loads(line)["completed"])
+            return doc["instances"], completed, doc.get("meta", {})

@@ -20,7 +20,10 @@ from typing import Any, Callable, Mapping, Sequence
 
 from .interpolate import render_command, render_environ
 from .dag import TaskDAG, TaskNode
-from .executors import GangExecutor, run_subprocess, stackable_key
+from .executors import (
+    GangExecutor, GangPool, WorkerPool, make_pool, run_subprocess,
+    stackable_key,
+)
 from .paramspace import ParameterSpace, combo_id, from_task
 from .provenance import StudyDB
 from .scheduler import Scheduler, TaskResult
@@ -95,7 +98,9 @@ class ParameterStudy:
                 local = _strip_ns(combo, tname)
                 dag.add(TaskNode(
                     id=node_id, task=tname, combo=local, deps=deps,
-                    payload={"global_combo": dict(combo)}))
+                    payload={"global_combo": dict(combo),
+                             "timeout": task.timeout,
+                             "allow_nonzero": task.allow_nonzero}))
         dag.validate()
         return dag
 
@@ -126,7 +131,10 @@ class ParameterStudy:
         if cmd is None:
             raise RuntimeError(
                 f"task {node.task!r} has no command and no registered callable")
-        return run_subprocess(cmd, env=env)
+        timeout = None
+        if isinstance(node.payload, Mapping):
+            timeout = node.payload.get("timeout")
+        return run_subprocess(cmd, env=env, timeout=timeout)
 
     def run(
         self,
@@ -135,13 +143,21 @@ class ParameterStudy:
         runner: Callable[[TaskNode], Any] | None = None,
         gang: GangExecutor | None = None,
         max_retries: int = 1,
+        pool: str | WorkerPool = "inline",
+        speculate: bool = False,
     ) -> dict[str, TaskResult]:
-        """Execute the study.
+        """Execute the study through the unified event engine.
 
         ``resume=True`` reloads the journal and skips completed nodes
-        (checkpoint/restart).  ``gang`` switches to batched dispatch:
-        whole DAG levels are grouped and launched as single programs —
-        the paper's single-cluster-job technique.
+        (checkpoint/restart).  ``pool`` selects the execution backend:
+        ``"inline"`` (deterministic, serial), ``"thread"`` / ``"process"``
+        (real parallelism across ``slots`` workers), or any ``WorkerPool``
+        instance.  ``gang`` switches to batched dispatch — stackable
+        ready groups launched as single programs, the paper's
+        single-cluster-job technique — implemented as a pool policy on
+        the same engine, so retries, failure closure, and journaling
+        apply there too.  ``speculate`` enables straggler duplication
+        (idempotent runners only).
         """
         instances = self.instances()
         completed: set[str] = set()
@@ -158,50 +174,33 @@ class ParameterStudy:
             "started": time.time(),
         })
         run_fn = runner or self._default_runner
+        self.journal.save(instances, completed, {"name": self.name})
 
         def _on_result(res: TaskResult) -> None:
             node = dag.nodes[res.id]
             self.db.record(res.id, res.status, res.runtime, combo=node.combo,
-                           error=res.error, attempts=res.attempts)
+                           error=res.error, attempts=res.attempts,
+                           slot=res.slot)
             if res.status == "ok":
                 completed.add(res.id)
-                self.journal.save(instances, completed, {"name": self.name})
+                self.journal.mark_complete(res.id)
 
         if gang is not None:
-            return self._run_gang(dag, gang, completed, _on_result)
-
-        sched = Scheduler(slots=slots, max_retries=max_retries)
-        return sched.execute(dag, run_fn, completed=completed,
-                             on_result=_on_result)
-
-    def _run_gang(
-        self,
-        dag: TaskDAG,
-        gang: GangExecutor,
-        completed: set[str],
-        on_result: Callable[[TaskResult], None],
-    ) -> dict[str, TaskResult]:
-        """Level-synchronous gang execution: each DAG level is grouped by
-        stackability and dispatched in batches."""
-        results: dict[str, TaskResult] = {}
-        for nid in completed:
-            if nid in dag.nodes:
-                results[nid] = TaskResult(id=nid, status="ok", runtime=0.0,
-                                          started=0.0, finished=0.0, attempts=0)
-        for level in dag.levels():
-            nodes = [dag.nodes[nid] for nid in level if nid not in completed]
-            if not nodes:
-                continue
-            t0 = time.monotonic()
-            values = gang.run(nodes)
-            t1 = time.monotonic()
-            per = (t1 - t0) / max(1, len(nodes))
-            for node in nodes:
-                res = TaskResult(id=node.id, status="ok", runtime=per,
-                                 started=t0, finished=t1,
-                                 value=values[node.id])
-                results[node.id] = res
-                on_result(res)
+            worker: WorkerPool = GangPool(gang)
+        elif isinstance(pool, WorkerPool):
+            worker = pool
+        else:
+            worker = make_pool(pool, slots)
+        sched = Scheduler(slots=slots, max_retries=max_retries,
+                          speculate=speculate)
+        try:
+            results = sched.execute(dag, run_fn, completed=completed,
+                                    on_result=_on_result, pool=worker)
+        finally:
+            if not isinstance(pool, WorkerPool):
+                worker.shutdown()
+        # compact the journal: fold the append log back into the base
+        self.journal.save(instances, completed, {"name": self.name})
         return results
 
 

@@ -15,8 +15,11 @@ Implements the keyword-value WDL of Ponce et al. (PEARC'18) §5:
 
 Reserved keywords (paper §5): command, name, environ, after, infiles,
 outfiles, substitute, parallel, batch, nnodes, ppnode, hosts, fixed,
-sampling.  Anything else is a user-defined keyword usable in
-interpolations (e.g. ``args`` in the paper's Fig. 5).
+sampling — plus two framework extensions: ``timeout`` (per-attempt
+wall-clock bound enforced by the scheduler) and ``allow_nonzero``
+(nonzero shell exits are data, not failures).  Anything else is a
+user-defined keyword usable in interpolations (e.g. ``args`` in the
+paper's Fig. 5).
 """
 from __future__ import annotations
 
@@ -46,6 +49,8 @@ RESERVED_KEYWORDS = frozenset(
         "hosts",
         "fixed",
         "sampling",
+        "timeout",
+        "allow_nonzero",
     }
 )
 
@@ -171,6 +176,8 @@ class TaskSpec:
     hosts: list[str] = dataclasses.field(default_factory=list)
     fixed: list[list[str]] = dataclasses.field(default_factory=list)
     sampling: dict[str, Any] | None = None
+    timeout: float | None = None
+    allow_nonzero: bool = False
     #: user-defined keywords → {subkey: [values]} or {None: [values]}
     user: dict[str, dict[str | None, list[Any]]] = dataclasses.field(
         default_factory=dict
@@ -268,6 +275,17 @@ def _parse_task(name: str, body: Mapping[str, Any]) -> TaskSpec:
                 spec.fixed = [[str(p) for p in val]]
             else:
                 raise WDLError(f"task {name!r}: fixed must be a list")
+        elif kw == "timeout":
+            try:
+                spec.timeout = float(val)
+            except (TypeError, ValueError) as e:
+                raise WDLError(f"task {name!r}: timeout must be a number") from e
+            if spec.timeout <= 0:
+                raise WDLError(f"task {name!r}: timeout must be positive")
+        elif kw == "allow_nonzero":
+            spec.allow_nonzero = (
+                val if isinstance(val, bool)
+                else str(val).strip().lower() in ("1", "true", "yes", "on"))
         elif kw == "sampling":
             if isinstance(val, str):
                 spec.sampling = {"method": val}

@@ -8,7 +8,9 @@ training calls (registry execution); anything else runs as a shell
 command.  ``parallel: vmap-stack`` gang-packs stackable instances (same
 arch/shape, different scalars) into ONE compiled program via
 ``repro.train.ensemble`` — the TPU realization of the paper's
-job-batching (§4.3).
+job-batching (§4.3).  ``--slots N --pool thread|process`` runs instances
+concurrently through the engine's worker pools (the paper's
+``nnodes × ppnode`` resource knob).
 """
 from __future__ import annotations
 
@@ -37,6 +39,13 @@ def main() -> None:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--gang", action="store_true",
                     help="vmap-stack stackable instances (one dispatch)")
+    ap.add_argument("--slots", type=int, default=1,
+                    help="concurrent execution slots (nnodes × ppnode)")
+    ap.add_argument("--pool", default="inline",
+                    choices=("inline", "thread", "process"),
+                    help="execution backend for non-gang runs")
+    ap.add_argument("--speculate", action="store_true",
+                    help="duplicate straggler tasks (idempotent tasks only)")
     ap.add_argument("--root", default=".papas")
     args = ap.parse_args()
 
@@ -64,7 +73,8 @@ def main() -> None:
               f"{gang.stats.dispatches} dispatches "
               f"(batching ×{gang.stats.batching_factor:.0f})")
     else:
-        results = study.run(resume=args.resume)
+        results = study.run(resume=args.resume, slots=args.slots,
+                            pool=args.pool, speculate=args.speculate)
 
     ok = sum(1 for r in results.values() if r.status == "ok")
     print(f"{ok}/{len(results)} instances complete; "

@@ -1,0 +1,293 @@
+"""Unified-engine concurrency tests.
+
+Deterministic coverage uses ``VirtualPool`` — a virtual-clock event
+source driving the *same* event loop as live execution — so out-of-order
+completion, retry-then-skip closure, timeouts, and speculative
+duplication are exercised without wall-clock sleeps.  One test runs a
+real ``ThreadWorkerPool`` and asserts actual makespan speedup.
+"""
+import time
+
+import pytest
+
+from repro.core import (
+    Scheduler, ShellResult, TaskDAG, TaskNode, VirtualClock, VirtualPool,
+    make_pool,
+)
+
+
+def build_dag(spec):
+    """spec: {node_id: [deps]}"""
+    dag = TaskDAG()
+    for nid, deps in spec.items():
+        dag.add(TaskNode(id=nid, task="t", combo={}, deps=list(deps)))
+    return dag
+
+
+def virtual(durations, **kw):
+    clock = VirtualClock()
+    return clock, VirtualPool(durations, clock, call_runner=True, **kw)
+
+
+class TestOutOfOrderCompletion:
+    def test_fast_tasks_finish_and_release_deps_first(self):
+        dag = build_dag({"a": [], "b": [], "c": [], "d": ["a"], "e": ["c"]})
+        clock, pool = virtual({"a": 5.0, "b": 3.0, "c": 1.0,
+                               "d": 5.0, "e": 1.0})
+        res = Scheduler(slots=3, clock=clock).execute(
+            dag, lambda n: n.id, pool=pool)
+        assert all(r.status == "ok" for r in res.values())
+        # c (dur 1) finished before b (dur 3) even though b dispatched first,
+        # and its successor e completed while a was still running
+        assert res["c"].finished < res["b"].finished
+        assert res["e"].finished < res["a"].finished
+        # successors never start before their dependency finishes
+        assert res["d"].started >= res["a"].finished
+        assert res["e"].started >= res["c"].finished
+
+    def test_real_slots_reported(self):
+        dag = build_dag({"a": [], "b": [], "c": []})
+        clock, pool = virtual({"a": 2.0, "b": 2.0, "c": 2.0})
+        res = Scheduler(slots=3, clock=clock).execute(
+            dag, lambda n: n.id, pool=pool)
+        assert sorted(r.slot for r in res.values()) == [0, 1, 2]
+
+    def test_execute_and_simulate_agree_on_slot_meaning(self):
+        dag = build_dag({"a": [], "b": []})
+        ev = Scheduler().simulate(dag, {"a": 1.0, "b": 1.0}, "serial")
+        assert all(e.slot == 0 for e in ev)
+        res = Scheduler(slots=1).execute(dag, lambda n: n.id)
+        assert all(r.slot == 0 for r in res.values())
+
+
+class TestRetryAndClosure:
+    def test_retry_then_skip_closure_under_out_of_order(self):
+        dag = build_dag({"bad": [], "ok1": [], "ok2": [],
+                         "child": ["bad"], "grand": ["child"]})
+
+        def runner(node):
+            if node.id == "bad":
+                raise RuntimeError("boom")
+            return node.id
+
+        # each bad attempt takes 2 virtual seconds; ok2 is still running
+        # (dur 5) when bad exhausts its retries at t=4
+        clock, pool = virtual({"bad": 2.0, "ok1": 1.0, "ok2": 5.0,
+                               "child": 1.0, "grand": 1.0})
+        res = Scheduler(slots=3, max_retries=1, clock=clock).execute(
+            dag, runner, pool=pool)
+        assert res["bad"].status == "failed" and res["bad"].attempts == 2
+        assert res["child"].status == "skipped"
+        assert res["grand"].status == "skipped"
+        assert "dependency failed" in res["child"].error
+        assert res["ok1"].status == "ok" and res["ok2"].status == "ok"
+        # ok1 resolved before the failure was final (out-of-order)
+        assert res["ok1"].finished < res["bad"].finished
+
+    def test_retry_spans_are_recorded(self):
+        dag = build_dag({"flaky": []})
+        calls = {"n": 0}
+
+        def runner(node):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise RuntimeError("transient")
+            return "fine"
+
+        clock, pool = virtual({"flaky": 2.0})
+        res = Scheduler(max_retries=2, clock=clock).execute(
+            dag, runner, pool=pool)
+        r = res["flaky"]
+        assert r.status == "ok" and r.attempts == 2
+        # runtime spans both attempts (2s each, back-to-back)
+        assert r.runtime == pytest.approx(4.0)
+
+
+class TestSpeculation:
+    def test_speculative_duplicate_wins(self):
+        ids = [f"a{i}" for i in range(5)] + ["zz-slow"]
+        dag = build_dag({nid: [] for nid in ids})
+
+        def durations(nid, attempt):
+            if nid == "zz-slow":
+                return 100.0 if attempt == 0 else 1.0
+            return 1.0
+
+        clock, pool = virtual(durations)
+        res = Scheduler(slots=2, straggler_factor=3.0, clock=clock,
+                        speculate=True).execute(dag, lambda n: n.id, pool=pool)
+        assert all(r.status == "ok" for r in res.values())
+        slow = res["zz-slow"]
+        # the duplicate (launched once elapsed > 3× median) finished first
+        assert slow.speculative is True
+        assert slow.finished < 100.0
+        assert max(r.finished for r in res.values()) < 100.0
+
+    def test_no_speculation_without_flag(self):
+        ids = [f"a{i}" for i in range(5)] + ["zz-slow"]
+        dag = build_dag({nid: [] for nid in ids})
+        dispatches = {"zz-slow": 0}
+
+        def durations(nid, attempt):
+            if nid == "zz-slow":
+                dispatches["zz-slow"] += 1
+                return 100.0
+            return 1.0
+
+        clock, pool = virtual(durations)
+        res = Scheduler(slots=2, clock=clock).execute(
+            dag, lambda n: n.id, pool=pool)
+        assert dispatches["zz-slow"] == 1
+        assert res["zz-slow"].speculative is False
+        assert res["zz-slow"].finished == pytest.approx(102.0)
+
+
+class TestTimeouts:
+    def test_payload_timeout_fails_attempt(self):
+        dag = TaskDAG()
+        dag.add(TaskNode(id="t", task="t", combo={},
+                         payload={"timeout": 1.5}))
+        clock, pool = virtual({"t": 10.0})
+        res = Scheduler(max_retries=0, clock=clock).execute(
+            dag, lambda n: n.id, pool=pool)
+        assert res["t"].status == "failed"
+        assert "timeout" in res["t"].error
+
+    def test_timeout_does_not_poison_queued_work(self):
+        # A timed-out dispatch leaves its worker busy; the slot must stay
+        # occupied until the zombie completes, so queued work and retries
+        # actually run instead of spuriously timing out behind it.
+        calls = {"a": 0, "b": 0}
+
+        def runner(node):
+            calls[node.id] += 1
+            if node.id == "a" and calls["a"] == 1:
+                time.sleep(0.3)
+            return node.id
+
+        dag = TaskDAG()
+        dag.add(TaskNode(id="a", task="t", combo={},
+                         payload={"timeout": 0.1}))
+        dag.add(TaskNode(id="b", task="t", combo={}))
+        res = Scheduler(slots=1, max_retries=1).execute(
+            dag, runner, pool=make_pool("thread", 1))
+        assert res["b"].status == "ok" and calls["b"] == 1
+        assert res["a"].status == "ok"
+        assert res["a"].attempts == 2 and calls["a"] == 2
+
+    def test_thread_pool_deadline_abandons_straggler(self):
+        dag = TaskDAG()
+        dag.add(TaskNode(id="t", task="t", combo={},
+                         payload={"timeout": 0.05}))
+        t0 = time.monotonic()
+        res = Scheduler(max_retries=0).execute(
+            dag, lambda n: time.sleep(0.5), pool=make_pool("thread", 1))
+        wall = time.monotonic() - t0
+        assert res["t"].status == "failed"
+        assert "timeout" in res["t"].error
+        assert wall < 0.4   # did not wait out the full 0.5s sleep
+
+
+class TestGangTimeoutBudget:
+    def test_gang_batch_gets_summed_timeout_budget(self, tmp_path):
+        # 4 members × timeout 0.4 → 1.6s batch budget; a 0.3s batch
+        # launch must NOT be failed against a single member's limit
+        from repro.core import GangExecutor, ParameterStudy, parse_yaml, \
+            stackable_key
+        spec = parse_yaml("""
+work:
+  args:
+    x: [1, 2, 3, 4]
+  timeout: 0.4
+  command: unused
+""")
+        study = ParameterStudy(spec, root=tmp_path, name="gangtmo")
+        gang = GangExecutor(
+            stackable_key,
+            lambda nodes: time.sleep(0.3) or [n.combo["args:x"]
+                                              for n in nodes])
+        res = study.run(gang=gang, max_retries=0)
+        assert len(res) == 4
+        assert all(r.status == "ok" for r in res.values())
+        assert gang.stats.dispatches == 1
+
+
+class TestProcessPoolPickling:
+    def test_default_runner_is_picklable(self, tmp_path):
+        # pool="process" pickles the bound default runner — the study's
+        # journal/provenance locks must not ride along
+        import pickle
+        from repro.core import ParameterStudy, parse_yaml
+        spec = parse_yaml("sh:\n  command: echo hi\n")
+        study = ParameterStudy(spec, root=tmp_path, name="pkl")
+        clone = pickle.loads(pickle.dumps(study._default_runner))
+        (node,) = study.build_dag().nodes.values()
+        assert clone(node).stdout.strip() == "hi"
+
+
+class TestShellClassification:
+    def test_nonzero_exit_classified_as_failure(self):
+        dag = build_dag({"sh": []})
+        runner = lambda n: ShellResult(3, "", "boom", 0.01)  # noqa: E731
+        res = Scheduler(max_retries=0).execute(dag, runner)
+        assert res["sh"].status == "failed"
+        assert "nonzero exit 3" in res["sh"].error
+        assert res["sh"].value is None
+
+    def test_allow_nonzero_payload_accepts_exit_code(self):
+        dag = TaskDAG()
+        dag.add(TaskNode(id="sh", task="t", combo={},
+                         payload={"allow_nonzero": True}))
+        runner = lambda n: ShellResult(3, "out", "", 0.01)  # noqa: E731
+        res = Scheduler(max_retries=0).execute(dag, runner)
+        assert res["sh"].status == "ok"
+        assert res["sh"].value.returncode == 3
+
+    def test_run_subprocess_returns_result_on_nonzero(self):
+        from repro.core import run_subprocess
+        r = run_subprocess("false")
+        assert r.returncode != 0 and not r.ok
+        r2 = run_subprocess("echo hi")
+        assert r2.returncode == 0 and r2.stdout.strip() == "hi"
+
+
+class TestRealParallelism:
+    def test_thread_pool_makespan_beats_serial_on_sleep_tasks(self):
+        n, nap = 24, 0.04
+        dag = build_dag({f"j{i:02d}": [] for i in range(n)})
+        runner = lambda node: time.sleep(nap)  # noqa: E731
+
+        t0 = time.monotonic()
+        serial = Scheduler(slots=1).execute(dag, runner)
+        serial_wall = time.monotonic() - t0
+
+        t0 = time.monotonic()
+        threaded = Scheduler(slots=4).execute(dag, runner,
+                                              pool=make_pool("thread", 4))
+        thread_wall = time.monotonic() - t0
+
+        assert all(r.status == "ok" for r in serial.values())
+        assert all(r.status == "ok" for r in threaded.values())
+        assert thread_wall < 0.5 * serial_wall
+        used = {r.slot for r in threaded.values()}
+        assert used <= set(range(4)) and len(used) > 1
+
+    def test_study_run_on_thread_pool(self, tmp_path):
+        from repro.core import ParameterStudy, parse_yaml
+        spec = parse_yaml("""
+work:
+  args:
+    x: ["1:8"]
+  command: unused
+""")
+        study = ParameterStudy(
+            spec, registry={"work": lambda c: time.sleep(0.02) or c["args:x"]},
+            root=tmp_path, name="tp")
+        res = study.run(slots=4, pool="thread")
+        assert len(res) == 8
+        assert all(r.status == "ok" for r in res.values())
+        assert sorted(r.value for r in res.values()) == list(range(1, 9))
+        # provenance + journal kept up under the concurrent engine
+        assert study.db.completed_ids() == set(res)
+        _, completed, _ = study.journal.load()
+        assert completed == set(res)

@@ -1,0 +1,75 @@
+"""Hypothesis property tests for the combinatorial engine (paper §5.1).
+
+Skipped wholesale when ``hypothesis`` is not installed (it is a dev-only
+dependency — see requirements-dev.txt); the example-based tests live in
+``test_paramspace.py`` and always run.
+"""
+import dataclasses
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import ParameterSpace, combo_id  # noqa: E402
+
+
+def small_values():
+    return st.lists(st.integers(0, 9), min_size=1, max_size=4, unique=True)
+
+
+def spaces():
+    return st.dictionaries(
+        st.sampled_from(list("abcdef")), small_values(),
+        min_size=1, max_size=4,
+    ).map(lambda params: ParameterSpace(params=params))
+
+
+class TestCartesianProps:
+    @given(spaces())
+    @settings(max_examples=100, deadline=None)
+    def test_cardinality_is_product(self, space):
+        # N_W = ∏ N_i  (paper, §5.1)
+        expected = 1
+        for vals in space.params.values():
+            expected *= len(vals)
+        combos = list(space.combinations())
+        assert space.size() == expected == len(combos)
+
+    @given(spaces())
+    @settings(max_examples=50, deadline=None)
+    def test_combinations_unique(self, space):
+        ids = [combo_id(c) for c in space.combinations()]
+        assert len(ids) == len(set(ids))
+
+    @given(spaces())
+    @settings(max_examples=50, deadline=None)
+    def test_every_value_appears(self, space):
+        combos = list(space.combinations())
+        for name, vals in space.params.items():
+            seen = {c[name] for c in combos}
+            assert seen == set(vals)
+
+
+class TestFixedProps:
+    @given(st.integers(1, 5), st.integers(1, 4))
+    @settings(max_examples=30, deadline=None)
+    def test_fixed_cardinality(self, n_fixed, n_free):
+        space = ParameterSpace(
+            params={"f1": list(range(n_fixed)), "f2": list(range(n_fixed)),
+                    "g": list(range(n_free))},
+            fixed=[["f1", "f2"]])
+        assert space.size() == n_fixed * n_free
+
+
+class TestSamplingProps:
+    @given(spaces(), st.integers(1, 8))
+    @settings(max_examples=50, deadline=None)
+    def test_sample_always_subset(self, space, k):
+        s2 = dataclasses.replace(
+            space, sampling={"method": "random", "count": k, "seed": 0})
+        full = list(space.combinations())
+        sample = s2.sample()
+        assert len(sample) == min(k, len(full))
+        for c in sample:
+            assert c in full

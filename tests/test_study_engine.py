@@ -72,6 +72,31 @@ sh:
         outs = sorted(r.value.stdout.strip() for r in res.values())
         assert outs == ["value-1", "value-2"]
 
+    EXIT3 = 'python -c "import sys; sys.exit(3)"'
+
+    def test_nonzero_exit_classified_by_scheduler(self, tmp_path):
+        spec = parse_yaml(f"sh:\n  command: {self.EXIT3}\n")
+        study = ParameterStudy(spec, root=tmp_path, name="rc")
+        (r,) = study.run(max_retries=0).values()
+        assert r.status == "failed"
+        assert "nonzero exit 3" in r.error
+
+    def test_allow_nonzero_keyword_accepts_exit_code(self, tmp_path):
+        spec = parse_yaml(
+            f"sh:\n  command: {self.EXIT3}\n  allow_nonzero: true\n")
+        study = ParameterStudy(spec, root=tmp_path, name="rc2")
+        (r,) = study.run(max_retries=0).values()
+        assert r.status == "ok"
+        assert r.value.returncode == 3
+
+    def test_wdl_timeout_propagates_to_dispatch(self, tmp_path):
+        spec = parse_yaml("sh:\n  command: sleep 5\n  timeout: 0.2\n")
+        study = ParameterStudy(spec, root=tmp_path, name="tmo")
+        (r,) = study.run(max_retries=0).values()
+        assert r.status == "failed"
+        assert "timeout" in r.error.lower()
+        assert r.attempts == 1
+
     def test_environ_propagates_to_subprocess(self, tmp_path):
         spec = parse_yaml("""
 sh:

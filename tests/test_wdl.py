@@ -1,6 +1,9 @@
-"""WDL parser tests: formats, ranges, keywords, validation errors."""
+"""WDL parser tests: formats, ranges, keywords, validation errors.
+
+Property-based range coverage (requires ``hypothesis``) lives in
+``test_wdl_props.py``.
+"""
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     WDLError, merge, parse_dict, parse_ini, parse_json, parse_range,
@@ -33,12 +36,6 @@ class TestRanges:
     def test_zero_step_raises(self):
         with pytest.raises(WDLError):
             parse_range("1:0:5")
-
-    @given(st.integers(-50, 50), st.integers(1, 7), st.integers(-50, 50))
-    @settings(max_examples=100, deadline=None)
-    def test_additive_matches_python_range(self, a, s, b):
-        got = parse_range(f"{a}:{s}:{b}")
-        assert got == list(range(a, b + 1, s))
 
 
 class TestParsing:
@@ -135,3 +132,21 @@ t:
         assert t.batch == "grouped"
         assert (t.nnodes, t.ppnode) == (4, 2)
         assert t.hosts == ["a", "b"]
+
+    def test_timeout_and_allow_nonzero_keywords(self):
+        spec = parse_yaml("""
+t:
+  command: x
+  timeout: 2.5
+  allow_nonzero: true
+""")
+        assert spec.tasks["t"].timeout == 2.5
+        assert spec.tasks["t"].allow_nonzero is True
+        # defaults: no timeout, nonzero exit is a failure
+        spec2 = parse_yaml("t:\n  command: x\n")
+        assert spec2.tasks["t"].timeout is None
+        assert spec2.tasks["t"].allow_nonzero is False
+
+    def test_nonpositive_timeout_rejected(self):
+        with pytest.raises(WDLError):
+            parse_yaml("t:\n  command: x\n  timeout: -1\n")

@@ -1,0 +1,19 @@
+"""Hypothesis property tests for the WDL range parser.
+
+Skipped wholesale when ``hypothesis`` is not installed (dev-only
+dependency); the example-based parser tests live in ``test_wdl.py``.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import parse_range  # noqa: E402
+
+
+class TestRangeProps:
+    @given(st.integers(-50, 50), st.integers(1, 7), st.integers(-50, 50))
+    @settings(max_examples=100, deadline=None)
+    def test_additive_matches_python_range(self, a, s, b):
+        got = parse_range(f"{a}:{s}:{b}")
+        assert got == list(range(a, b + 1, s))
