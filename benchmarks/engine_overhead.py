@@ -11,8 +11,8 @@ from __future__ import annotations
 
 import time
 
-from repro.core import ParameterStudy, Scheduler, TaskDAG, TaskNode, \
-    make_pool, parse_yaml
+from repro.core import LocalTransport, ParameterStudy, Scheduler, TaskDAG, \
+    TaskNode, make_pool, parse_yaml
 
 N_SLEEP = 32
 SLEEP_S = 0.05
@@ -75,7 +75,36 @@ def _makespan_rows() -> list[tuple[str, float, dict]]:
                   "meets_half_serial": walls["thread"] < 0.5 * walls["inline"]}))
     rows.append(("engine_process_speedup_vs_serial", 0.0,
                  {"speedup": round(walls["inline"] / walls["process"], 2)}))
+    rows.extend(_ssh_rows(walls["inline"]))
     return rows
+
+
+def _ssh_rows(serial_wall: float) -> list[tuple[str, float, dict]]:
+    """SSH-pool makespan over hosts × ppnode slots (LocalTransport fake:
+    per-host slot accounting is real, the network is not) — the remote
+    dispatch tax relative to the in-process thread pool."""
+    dag = TaskDAG()
+    for i in range(N_SLEEP):
+        dag.add(TaskNode(id=f"s{i:02d}", task="sleep", combo={},
+                         payload={"command": f"sleep {SLEEP_S}"}))
+    pool = make_pool(
+        "ssh", hosts=[f"h{i}" for i in range(SLOTS // 2)], ppnode=2,
+        transport=LocalTransport(),
+        render=lambda node: (node.payload["command"], {}))
+    t0 = time.perf_counter()
+    try:
+        res = Scheduler(slots=pool.slots).execute(dag, None, pool=pool)
+    finally:
+        pool.shutdown()
+    wall = time.perf_counter() - t0
+    hosts_used = {r.host for r in res.values()}
+    return [("engine_makespan_ssh", wall * 1e6,
+             {"tasks": N_SLEEP, "slots": pool.slots,
+              "hosts": len(pool.hosts), "ppnode": pool.ppnode,
+              "hosts_used": len(hosts_used),
+              "ok": sum(1 for r in res.values() if r.status == "ok"),
+              "wall_s": round(wall, 3),
+              "speedup_vs_serial": round(serial_wall / wall, 2)})]
 
 
 def _time_us(fn, repeats=5):

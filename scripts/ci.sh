@@ -1,8 +1,21 @@
 #!/usr/bin/env bash
-# One-shot local gate: byte-compile everything, then run the tier-1 suite.
+# One-shot local gate: byte-compile everything, run the tier-1 suite,
+# then exercise the remote-execution path (SSH pool + batch rendering
+# over the no-network fakes) explicitly.
 # Usage: scripts/ci.sh [extra pytest args...]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 python -m compileall -q src benchmarks scripts
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+# remote backends: run their suites by name so a collection change can
+# never silently drop them from the gate
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+    tests/test_remote_pool.py tests/test_batch_pool.py
+
+# end-to-end smoke: a study through the SSH worker pool (hosts × ppnode
+# slots, LocalTransport fake — commands run locally, no network), with
+# per-task hosts asserted in the journal by the example itself
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py \
+    --pool ssh --hosts localhost --ppnode 2

@@ -17,6 +17,18 @@ from .executors import (
 from .interpolate import InterpolationError, interpolate, render_command, substitute_content
 from .paramspace import ParameterSpace, combo_id, from_task
 from .provenance import StudyDB, config_hash
+from .remote import (
+    BatchWorkerPool,
+    LocalSubmitter,
+    LocalTransport,
+    SchedulerSubmitter,
+    SSHTransport,
+    SSHWorkerPool,
+    Transport,
+    TransportError,
+    parse_hosts,
+    render_batch_script,
+)
 from .scheduler import (
     ScheduleEvent,
     Scheduler,
@@ -49,6 +61,9 @@ __all__ = [
     "CompletionEvent", "GangExecutor", "GangPool", "GangStats", "InlinePool",
     "ProcessWorkerPool", "ShellResult", "ThreadWorkerPool", "WorkerPool",
     "make_pool", "run_subprocess", "stackable_key",
+    "BatchWorkerPool", "LocalSubmitter", "LocalTransport",
+    "SchedulerSubmitter", "SSHTransport", "SSHWorkerPool", "Transport",
+    "TransportError", "parse_hosts", "render_batch_script",
     "InterpolationError", "interpolate", "render_command", "substitute_content",
     "ParameterSpace", "combo_id", "from_task",
     "StudyDB", "config_hash",

@@ -51,11 +51,21 @@ class ShellResult:
         return self.returncode == 0
 
 
+def merged_env(env: Mapping[str, str] | None) -> dict[str, str]:
+    """The task environment: the ambient process env overlaid with the
+    instance's rendered variables (paper §5 ``environ``)."""
+    full_env = dict(os.environ)
+    if env:
+        full_env.update({k: str(v) for k, v in env.items()})
+    return full_env
+
+
 def run_subprocess(
     command: str,
     env: Mapping[str, str] | None = None,
     timeout: float | None = None,
     cwd: str | None = None,
+    shell: bool = False,
 ) -> ShellResult:
     """Run one black-box task; measures runtime (the paper's task
     profiler: "the application is not mandated to have an internal
@@ -66,17 +76,15 @@ def run_subprocess(
     so retries and failure closure apply uniformly to shell tasks.  A
     ``timeout`` propagates to ``subprocess.run``; expiry raises
     ``subprocess.TimeoutExpired``, which the scheduler records as a
-    failed attempt.
+    failed attempt.  ``shell=True`` runs the command through ``sh -c``
+    (pipes/redirects honored) instead of splitting it into argv.
     """
-    full_env = dict(os.environ)
-    if env:
-        full_env.update({k: str(v) for k, v in env.items()})
     t0 = time.monotonic()
     proc = subprocess.run(
-        shlex.split(command),
+        ["sh", "-c", command] if shell else shlex.split(command),
         capture_output=True,
         text=True,
-        env=full_env,
+        env=merged_env(env),
         timeout=timeout,
         cwd=cwd,
         check=False,
@@ -102,6 +110,7 @@ class CompletionEvent:
     errors: list[str | None]      # non-None marks that node's attempt failed
     started: float
     finished: float
+    host: str | None = None       # executing host / allocation (remote pools)
 
 
 def _run_nodes(runner: Runner, nodes: Sequence[TaskNode]
@@ -127,6 +136,15 @@ class WorkerPool:
 
     kind = "base"
 
+    @property
+    def dispatch_slots(self) -> int:
+        """How many concurrent dispatches the scheduler should drive.
+        Defaults to the pool's slot count (one task per dispatch);
+        grouped backends (batch allocations) override this — each
+        dispatch already hosts a whole group, so driving ``slots``
+        dispatches would over-subscribe the declared capacity."""
+        return int(getattr(self, "slots", 1) or 1)
+
     def take(self, ready: list[str], dag: "TaskDAG") -> list[str]:
         """Claim the next batch of node ids from the (sorted) ready
         queue, removing them.  Default: one node per dispatch."""
@@ -140,6 +158,13 @@ class WorkerPool:
         """Block for the next completion; ``None`` signals the timeout
         elapsed (the loop then checks deadlines and stragglers)."""
         raise NotImplementedError
+
+    def cancel(self, token: int) -> None:
+        """Release backend resources held by an abandoned dispatch (a
+        speculative duplicate that lost the race, or an expired
+        attempt).  The pool must still deliver a completion event for
+        the token so the scheduler can return its slot to service.
+        Default: no-op — local pools just let the worker finish."""
 
     def shutdown(self) -> None:
         pass
@@ -244,15 +269,54 @@ class ProcessWorkerPool(_FuturePool):
         return ProcessPoolExecutor(max_workers=slots)
 
 
-def make_pool(kind: str, slots: int = 1) -> WorkerPool:
-    """Construct a pool by name: ``inline``, ``thread``, or ``process``."""
+#: every kind ``make_pool`` accepts (remote kinds live in ``remote.py``).
+VALID_POOL_KINDS = ("inline", "thread", "process", "ssh", "slurm", "pbs")
+
+
+def make_pool(kind: str, slots: int = 1, **remote_kwargs: Any) -> WorkerPool:
+    """Construct a pool by name.
+
+    Local kinds: ``inline``, ``thread``, ``process`` (``slots``
+    workers).  Remote kinds: ``ssh`` (requires ``hosts``; optional
+    ``ppnode``, ``transport``, ``render``) and ``slurm`` / ``pbs``
+    (optional ``nnodes``, ``ppnode``, ``submitter``, ``render``,
+    ``spool_root``) — their slot count is ``hosts × ppnode`` /
+    ``nnodes × ppnode``, not ``slots``.  An unknown kind raises a
+    ``ValueError`` naming every valid kind.
+    """
     if kind == "inline":
         return InlinePool()
     if kind == "thread":
         return ThreadWorkerPool(slots)
     if kind == "process":
         return ProcessWorkerPool(slots)
-    raise ValueError(f"unknown pool kind {kind!r}")
+    if kind == "ssh":
+        from .remote import SSHWorkerPool
+
+        hosts = remote_kwargs.pop("hosts", None)
+        if not hosts:
+            raise ValueError(
+                "pool kind 'ssh' requires a non-empty host list "
+                "(WDL 'hosts:' keyword or --hosts)")
+        remote_kwargs.pop("nnodes", None)
+        remote_kwargs.pop("submitter", None)
+        remote_kwargs.pop("spool_root", None)
+        return SSHWorkerPool(
+            hosts, ppnode=remote_kwargs.pop("ppnode", None) or 1,
+            **remote_kwargs)
+    if kind in ("slurm", "pbs"):
+        from .remote import BatchWorkerPool
+
+        remote_kwargs.pop("hosts", None)
+        remote_kwargs.pop("transport", None)
+        return BatchWorkerPool(
+            batch=kind,
+            nnodes=remote_kwargs.pop("nnodes", None) or 1,
+            ppnode=remote_kwargs.pop("ppnode", None) or 1,
+            **remote_kwargs)
+    raise ValueError(
+        f"unknown pool kind {kind!r}; valid kinds: "
+        + ", ".join(VALID_POOL_KINDS))
 
 
 # ---------------------------------------------------------------------------

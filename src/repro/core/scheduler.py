@@ -63,6 +63,7 @@ class TaskResult:
     error: str | None = None
     slot: int = -1              # real slot occupied (execute and simulate)
     speculative: bool = False   # won by a speculative duplicate dispatch
+    host: str | None = None     # executing host / allocation (remote pools)
 
 
 @dataclasses.dataclass
@@ -301,12 +302,15 @@ class Scheduler:
             # The worker may still be busy: the slot stays occupied until
             # the abandoned dispatch's completion event actually arrives,
             # so later work never queues behind a zombie and times out.
+            # ``pool.cancel`` lets remote backends kill the dispatch so
+            # the *host* resource is released too, not just the slot.
             d = running.pop(token, None)
             if d is None:
                 return
             abandoned[token] = d.slot
             for nid in d.nids:
                 live_tokens.get(nid, set()).discard(token)
+            pool.cancel(token)
 
         def _skip(nid: str) -> None:
             now = self.clock()
@@ -337,7 +341,7 @@ class Scheduler:
 
         def _handle_outcome(d: _Dispatch, nid: str, value: Any,
                             error: str | None, started: float,
-                            finished: float) -> None:
+                            finished: float, host: str | None = None) -> None:
             live_tokens.get(nid, set()).discard(d.token)
             if nid in results:      # duplicate copy lost the race
                 return
@@ -361,12 +365,14 @@ class Scheduler:
                 _resolve(TaskResult(
                     id=nid, status="failed", runtime=finished - fs,
                     started=fs, finished=finished,
-                    attempts=attempts.get(nid, 1), error=error, slot=d.slot))
+                    attempts=attempts.get(nid, 1), error=error, slot=d.slot,
+                    host=host))
             else:
                 _resolve(TaskResult(
                     id=nid, status="ok", runtime=finished - fs, started=fs,
                     finished=finished, attempts=attempts.get(nid, 1),
-                    value=value, slot=d.slot, speculative=d.speculative))
+                    value=value, slot=d.slot, speculative=d.speculative,
+                    host=host))
 
         def _expire(d: _Dispatch, now: float) -> None:
             _abandon(d.token)
@@ -457,7 +463,8 @@ class Scheduler:
             d = running.pop(ev.token)
             heapq.heappush(free, d.slot)
             for nid, value, error in zip(d.nids, ev.values, ev.errors):
-                _handle_outcome(d, nid, value, error, ev.started, ev.finished)
+                _handle_outcome(d, nid, value, error, ev.started, ev.finished,
+                                host=ev.host)
 
         return results
 

@@ -47,12 +47,14 @@ class StudyJournal:
         instances: list[dict[str, Any]],
         completed: set[str],
         meta: Mapping[str, Any] | None,
+        hosts: Mapping[str, str] | None = None,
     ) -> None:
         doc = {
             "version": 1,
             "instances": instances,
             "completed": sorted(completed),
             "meta": dict(meta or {}),
+            "hosts": dict(hosts or {}),
         }
         tmp = self.path.with_suffix(".tmp")
         self.path.parent.mkdir(parents=True, exist_ok=True)
@@ -67,19 +69,25 @@ class StudyJournal:
         instances: list[dict[str, Any]],
         completed: set[str],
         meta: Mapping[str, Any] | None = None,
+        hosts: Mapping[str, str] | None = None,
     ) -> None:
-        """Write (compact) the full study state atomically."""
+        """Write (compact) the full study state atomically.  ``hosts``
+        maps task id → executing host (remote backends)."""
         with self._lock:
-            self._write_base(instances, completed, meta)
+            self._write_base(instances, completed, meta, hosts)
 
-    def mark_complete(self, task_id: str) -> None:
+    def mark_complete(self, task_id: str, host: str | None = None) -> None:
         """Incrementally record one completion: an O(1) locked append to
-        the sidecar log, never a rewrite of the base document."""
+        the sidecar log, never a rewrite of the base document.  ``host``
+        records where the task ran (remote provenance)."""
+        entry: dict[str, Any] = {"completed": task_id}
+        if host:
+            entry["host"] = host
         with self._lock:
             if not self.path.exists():
                 self._write_base([], set(), {})
             with self.log_path.open("a") as f:
-                f.write(json.dumps({"completed": task_id}) + "\n")
+                f.write(json.dumps(entry) + "\n")
                 f.flush()
 
     def load(self) -> tuple[list[dict[str, Any]], set[str], dict[str, Any]]:
@@ -96,3 +104,21 @@ class StudyJournal:
                         if line:
                             completed.add(json.loads(line)["completed"])
             return doc["instances"], completed, doc.get("meta", {})
+
+    def hosts(self) -> dict[str, str]:
+        """Task id → executing host, folded from the base document and
+        the sidecar log (remote-backend provenance)."""
+        with self._lock:
+            hosts: dict[str, str] = {}
+            if self.path.exists():
+                doc = json.loads(self.path.read_text())
+                hosts.update(doc.get("hosts") or {})
+            if self.log_path.exists():
+                with self.log_path.open() as f:
+                    for line in f:
+                        line = line.strip()
+                        if line:
+                            entry = json.loads(line)
+                            if entry.get("host"):
+                                hosts[entry["completed"]] = entry["host"]
+            return hosts

@@ -136,6 +136,18 @@ class ParameterStudy:
             timeout = node.payload.get("timeout")
         return run_subprocess(cmd, env=env, timeout=timeout)
 
+    def _remote_spec_defaults(self) -> dict[str, Any]:
+        """Remote-execution keywords from the WDL: first task that sets
+        ``hosts`` / ``batch`` / ``nnodes`` / ``ppnode`` wins."""
+        out: dict[str, Any] = {"hosts": None, "batch": None,
+                               "nnodes": None, "ppnode": None}
+        for task in self.spec.tasks.values():
+            out["hosts"] = out["hosts"] or (task.hosts or None)
+            out["batch"] = out["batch"] or task.batch
+            out["nnodes"] = out["nnodes"] or task.nnodes
+            out["ppnode"] = out["ppnode"] or task.ppnode
+        return out
+
     def run(
         self,
         slots: int = 1,
@@ -145,19 +157,29 @@ class ParameterStudy:
         max_retries: int = 1,
         pool: str | WorkerPool = "inline",
         speculate: bool = False,
+        hosts: Sequence[str] | None = None,
+        ppnode: int | None = None,
+        nnodes: int | None = None,
+        transport: Any = None,
+        submitter: Any = None,
     ) -> dict[str, TaskResult]:
         """Execute the study through the unified event engine.
 
         ``resume=True`` reloads the journal and skips completed nodes
         (checkpoint/restart).  ``pool`` selects the execution backend:
         ``"inline"`` (deterministic, serial), ``"thread"`` / ``"process"``
-        (real parallelism across ``slots`` workers), or any ``WorkerPool``
-        instance.  ``gang`` switches to batched dispatch — stackable
-        ready groups launched as single programs, the paper's
-        single-cluster-job technique — implemented as a pool policy on
-        the same engine, so retries, failure closure, and journaling
-        apply there too.  ``speculate`` enables straggler duplication
-        (idempotent runners only).
+        (real parallelism across ``slots`` workers), ``"ssh"`` /
+        ``"slurm"`` / ``"pbs"`` (remote dispatch of rendered commands —
+        slot count comes from ``hosts × ppnode`` / ``nnodes × ppnode``,
+        defaulting to the WDL ``hosts:``/``batch:``/``nnodes``/``ppnode``
+        keywords; ``transport`` / ``submitter`` inject the network seam,
+        e.g. the no-network ``LocalTransport``/``LocalSubmitter`` fakes),
+        or any ``WorkerPool`` instance.  ``gang`` switches to batched
+        dispatch — stackable ready groups launched as single programs,
+        the paper's single-cluster-job technique — implemented as a pool
+        policy on the same engine, so retries, failure closure, and
+        journaling apply there too.  ``speculate`` enables straggler
+        duplication (idempotent runners only).
         """
         instances = self.instances()
         completed: set[str] = set()
@@ -174,23 +196,46 @@ class ParameterStudy:
             "started": time.time(),
         })
         run_fn = runner or self._default_runner
-        self.journal.save(instances, completed, {"name": self.name})
+        host_map: dict[str, str] = {}
+        if resume:
+            host_map.update(self.journal.hosts())
+        self.journal.save(instances, completed, {"name": self.name},
+                          hosts=host_map)
 
         def _on_result(res: TaskResult) -> None:
             node = dag.nodes[res.id]
             self.db.record(res.id, res.status, res.runtime, combo=node.combo,
                            error=res.error, attempts=res.attempts,
-                           slot=res.slot)
+                           slot=res.slot, host=res.host)
             if res.status == "ok":
                 completed.add(res.id)
-                self.journal.mark_complete(res.id)
+                if res.host:
+                    host_map[res.id] = res.host
+                self.journal.mark_complete(res.id, host=res.host)
 
         if gang is not None:
             worker: WorkerPool = GangPool(gang)
         elif isinstance(pool, WorkerPool):
             worker = pool
         else:
-            worker = make_pool(pool, slots)
+            if pool in ("ssh", "slurm", "pbs", "batch"):
+                d = self._remote_spec_defaults()
+                kind = pool if pool != "batch" else (d["batch"] or "slurm")
+                worker = make_pool(
+                    kind, slots,
+                    hosts=list(hosts) if hosts else d["hosts"],
+                    ppnode=ppnode or d["ppnode"],
+                    nnodes=nnodes or d["nnodes"],
+                    render=self.render_node, transport=transport,
+                    submitter=submitter,
+                    spool_root=self.db.dir / "batch")
+            else:
+                worker = make_pool(pool, slots)
+        # remote pools derive their capacity from hosts/nnodes × ppnode;
+        # the scheduler must drive every dispatch lane the pool offers
+        # (for batch pools that is the allocation count, not the group
+        # size — one dispatch already hosts a whole group)
+        slots = max(slots, getattr(worker, "dispatch_slots", slots) or slots)
         sched = Scheduler(slots=slots, max_retries=max_retries,
                           speculate=speculate)
         try:
@@ -200,7 +245,8 @@ class ParameterStudy:
             if not isinstance(pool, WorkerPool):
                 worker.shutdown()
         # compact the journal: fold the append log back into the base
-        self.journal.save(instances, completed, {"name": self.name})
+        self.journal.save(instances, completed, {"name": self.name},
+                          hosts=host_map)
         return results
 
 

@@ -1,0 +1,116 @@
+"""Version-tolerant shims over jax APIs that moved between releases.
+
+The model code targets the current mesh API (``jax.set_mesh`` /
+``jax.sharding.get_abstract_mesh`` / ``jax.shard_map``); older jax
+releases (<= 0.4.x) spell these ``with mesh:`` (the legacy ambient
+physical mesh), ``jax._src.mesh.get_abstract_mesh``, and
+``jax.experimental.shard_map.shard_map``.  Everything in the repo goes
+through this module so a jax upgrade (or downgrade) is a no-op for
+model and launch code.
+
+Exports:
+
+* ``get_abstract_mesh()`` — the active mesh-like object (abstract mesh
+  if one is set, else the ambient physical mesh).  Always returns an
+  object with an ``axis_names`` attribute; ``axis_names`` is ``()``
+  when no mesh is active.
+* ``mesh_axis_names()`` — convenience: the active mesh's axis names.
+* ``set_mesh(mesh)`` — context manager activating ``mesh`` as the
+  ambient mesh for sharding constraints and ``shard_map``.
+* ``shard_map(f, mesh=..., in_specs=..., out_specs=...)`` — the SPMD
+  map, whichever module it lives in.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Iterator
+
+import jax
+
+
+class _NoMesh:
+    """Sentinel mesh-like: no axes, not usable for shard_map."""
+
+    axis_names: tuple[str, ...] = ()
+    shape: dict[str, int] = {}
+
+    def __bool__(self) -> bool:
+        return False
+
+
+_NO_MESH = _NoMesh()
+
+
+def _ambient_physical_mesh() -> Any | None:
+    """The legacy ``with mesh:`` ambient mesh, if one is active."""
+    try:
+        from jax._src import mesh as _mesh_lib
+
+        phys = _mesh_lib.thread_resources.env.physical_mesh
+        if getattr(phys, "axis_names", ()):
+            return phys
+    except Exception:  # pragma: no cover - internal layout changed
+        pass
+    return None
+
+
+def get_abstract_mesh() -> Any:
+    """The active mesh (abstract if set, else ambient physical).
+
+    Mirrors ``jax.sharding.get_abstract_mesh`` where available, but
+    never raises on older jax: with no active mesh it returns an empty
+    mesh-like object whose ``axis_names`` is ``()``.
+    """
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is None:
+        try:
+            from jax._src import mesh as _mesh_lib
+
+            getter = getattr(_mesh_lib, "get_abstract_mesh", None)
+        except Exception:  # pragma: no cover
+            getter = None
+    if getter is not None:
+        try:
+            am = getter()
+            if getattr(am, "axis_names", ()):
+                return am
+        except Exception:  # pragma: no cover - defensive
+            pass
+    return _ambient_physical_mesh() or _NO_MESH
+
+
+def mesh_axis_names() -> tuple[str, ...]:
+    return tuple(getattr(get_abstract_mesh(), "axis_names", ()) or ())
+
+
+@contextlib.contextmanager
+def set_mesh(mesh: Any) -> Iterator[Any]:
+    """Activate ``mesh`` as the ambient mesh (``jax.set_mesh`` on new
+    jax; the ``with mesh:`` physical-mesh context on old jax)."""
+    setter = getattr(jax, "set_mesh", None)
+    cm = setter(mesh) if setter is not None else mesh
+    with cm:
+        yield mesh
+
+
+def shard_map(f: Any = None, /, **kwargs: Any) -> Any:
+    """``jax.shard_map`` where it exists, else the experimental one."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn  # type: ignore
+    return fn(f, **kwargs) if f is not None else fn(**kwargs)
+
+
+def make_mesh(shape: tuple[int, ...], axis_names: tuple[str, ...]) -> Any:
+    """``jax.make_mesh`` where it exists, else a Mesh over a device
+    array reshaped to ``shape``."""
+    maker = getattr(jax, "make_mesh", None)
+    if maker is not None:
+        return maker(shape, axis_names)
+    import numpy as np
+
+    n = 1
+    for s in shape:
+        n *= s
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devices, axis_names)

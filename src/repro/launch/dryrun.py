@@ -30,6 +30,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import all_archs, get  # noqa: E402
+from repro.jax_compat import set_mesh  # noqa: E402
 from repro.distributed import sharding as shd  # noqa: E402
 from repro.launch.mesh import (  # noqa: E402
     HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh, mesh_chips,
@@ -149,7 +150,7 @@ def lower_train_cell(cfg, shape, mesh, n_micro: int = 1
         in_shardings=(state_sh, batch_sh),
         out_shardings=(state_sh, metrics_sh),
         donate_argnums=(0,))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = jitted.lower(state, batch)
         compiled = lowered.compile()
     return lowered, compiled
@@ -180,7 +181,7 @@ def lower_prefill_cell(cfg, shape, mesh):
         mesh, shd.fit_spec(P(dp, None, "model"), out_abs.shape, mesh))
     jitted = jax.jit(prefill, in_shardings=(params_sh, batch_sh),
                      out_shardings=out_sh)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = jitted.lower(params, batch)
         compiled = lowered.compile()
     return lowered, compiled
@@ -209,7 +210,7 @@ def lower_decode_cell(cfg, shape, mesh):
         in_shardings=(params_sh, cache_sh, token_sh),
         out_shardings=(logits_sh, cache_sh),
         donate_argnums=(1,))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = jitted.lower(params, cache, token)
         compiled = lowered.compile()
     return lowered, compiled

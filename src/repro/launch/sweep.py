@@ -11,6 +11,14 @@ arch/shape, different scalars) into ONE compiled program via
 job-batching (§4.3).  ``--slots N --pool thread|process`` runs instances
 concurrently through the engine's worker pools (the paper's
 ``nnodes × ppnode`` resource knob).
+
+Remote backends (paper §4.3 distributed parallelization):
+``--pool ssh --hosts a,b --ppnode 2`` dispatches rendered shell
+commands over ``hosts × ppnode`` slots; ``--pool slurm|pbs --nnodes N
+--ppnode P`` submits grouped allocations.  ``--transport``/
+``--submitter`` default to the no-network fakes (commands run locally,
+per-"host" accounting preserved) — pass ``--transport ssh`` /
+``--submitter scheduler`` to reach real hosts / a real queue.
 """
 from __future__ import annotations
 
@@ -22,7 +30,10 @@ from typing import Any
 import jax
 
 from repro.configs import get_smoke
-from repro.core import GangExecutor, load_study, stackable_key
+from repro.core import (
+    GangExecutor, LocalSubmitter, LocalTransport, SchedulerSubmitter,
+    SSHTransport, load_study, stackable_key,
+)
 from repro.train.ensemble import train_ensemble
 
 
@@ -40,10 +51,26 @@ def main() -> None:
     ap.add_argument("--gang", action="store_true",
                     help="vmap-stack stackable instances (one dispatch)")
     ap.add_argument("--slots", type=int, default=1,
-                    help="concurrent execution slots (nnodes × ppnode)")
+                    help="concurrent execution slots (local pools)")
     ap.add_argument("--pool", default="inline",
-                    choices=("inline", "thread", "process"),
-                    help="execution backend for non-gang runs")
+                    help="execution backend for non-gang runs: inline, "
+                         "thread, process, ssh, slurm, or pbs")
+    ap.add_argument("--hosts", default=None,
+                    help="comma-separated host list for --pool ssh "
+                         "(default: the WDL hosts: keyword)")
+    ap.add_argument("--ppnode", type=int, default=None,
+                    help="processes per node for ssh/batch pools")
+    ap.add_argument("--nnodes", type=int, default=None,
+                    help="allocation node count for batch pools")
+    ap.add_argument("--transport", choices=("local", "ssh"), default="local",
+                    help="ssh-pool transport: 'local' = no-network fake "
+                         "(runs commands on this machine, one slot per "
+                         "host×ppnode), 'ssh' = real ssh subprocesses")
+    ap.add_argument("--submitter", choices=("local", "scheduler"),
+                    default="local",
+                    help="batch-pool submitter: 'local' = run the rendered "
+                         "script with sh (no scheduler binary), "
+                         "'scheduler' = real sbatch/qsub")
     ap.add_argument("--speculate", action="store_true",
                     help="duplicate straggler tasks (idempotent tasks only)")
     ap.add_argument("--root", default=".papas")
@@ -73,15 +100,33 @@ def main() -> None:
               f"{gang.stats.dispatches} dispatches "
               f"(batching ×{gang.stats.batching_factor:.0f})")
     else:
-        results = study.run(resume=args.resume, slots=args.slots,
-                            pool=args.pool, speculate=args.speculate)
+        transport = None
+        if args.pool == "ssh":
+            transport = (SSHTransport() if args.transport == "ssh"
+                         else LocalTransport())
+        submitter = None
+        if args.pool in ("slurm", "pbs"):
+            submitter = (SchedulerSubmitter(args.pool)
+                         if args.submitter == "scheduler"
+                         else LocalSubmitter())
+        hosts = ([h.strip() for h in args.hosts.split(",") if h.strip()]
+                 if args.hosts else None)
+        try:
+            results = study.run(resume=args.resume, slots=args.slots,
+                                pool=args.pool, speculate=args.speculate,
+                                hosts=hosts, ppnode=args.ppnode,
+                                nnodes=args.nnodes, transport=transport,
+                                submitter=submitter)
+        except ValueError as e:
+            ap.error(str(e))    # e.g. unknown --pool kind, missing hosts
 
     ok = sum(1 for r in results.values() if r.status == "ok")
     print(f"{ok}/{len(results)} instances complete; "
           f"provenance in {study.db.dir}")
     for rid, res in sorted(results.items()):
         val = res.value if res.value is not None else ""
-        print(f"  {rid}: {res.status} ({res.runtime:.2f}s) {val}")
+        where = f" @{res.host}" if res.host else ""
+        print(f"  {rid}: {res.status} ({res.runtime:.2f}s){where} {val}")
 
 
 if __name__ == "__main__":

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import ckpt
+from repro.jax_compat import set_mesh
 from repro.configs import get, get_smoke
 from repro.data.pipeline import make_stream
 from repro.distributed import sharding as shd
@@ -70,7 +71,7 @@ def main() -> None:
 
     t0 = time.time()
     tokens = 0
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for i, host_batch in enumerate(stream):
             step = start_step + i
             if step >= args.steps:

@@ -11,6 +11,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.jax_compat import mesh_axis_names
+
 
 def cast(x: jax.Array, dtype: Any) -> jax.Array:
     return x.astype(dtype) if x.dtype != jnp.dtype(dtype) else x
@@ -19,9 +21,8 @@ def cast(x: jax.Array, dtype: Any) -> jax.Array:
 def maybe_shard(x: jax.Array, *entries: Any) -> jax.Array:
     """Sharding constraint against the ambient abstract mesh; no-op when
     no mesh (or no "model" axis) is active — keeps model code usable on
-    a single device and fully sharded under jax.set_mesh."""
-    am = jax.sharding.get_abstract_mesh()
-    names = getattr(am, "axis_names", None) or ()
+    a single device and fully sharded under an active mesh."""
+    names = mesh_axis_names()
     if "model" not in names:
         return x
     fixed = tuple(e if (e is None or (isinstance(e, str) and e in names)

@@ -1,0 +1,10 @@
+#!/bin/sh
+#PBS -N papas-demo
+#PBS -l nodes=2:ppn=4
+#PBS -o /spool/job.out
+#PBS -e /spool/job.err
+
+# 2 tasks inside one pbs allocation (2 nodes x 4 procs)
+( ( export OMP_NUM_THREADS=1; matmul 16 result_16N_1T.txt ) > /spool/0.out 2> /spool/0.err; printf '%s' "$?" > /spool/0.rc.tmp && mv /spool/0.rc.tmp /spool/0.rc ) &
+( ( export OMP_NUM_THREADS=2; matmul 32 result_32N_2T.txt ) > /spool/1.out 2> /spool/1.err; printf '%s' "$?" > /spool/1.rc.tmp && mv /spool/1.rc.tmp /spool/1.rc ) &
+wait

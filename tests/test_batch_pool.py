@@ -1,0 +1,236 @@
+"""Batch-scheduler worker pool: golden SLURM/PBS submission scripts (no
+scheduler binary required), grouped-allocation execution through the
+fake LocalSubmitter, spool-protocol completion, and cancellation."""
+from pathlib import Path
+
+import pytest
+
+from repro.core import (
+    BatchWorkerPool, LocalSubmitter, ParameterStudy, Scheduler, TaskDAG,
+    TaskNode, make_pool, parse_yaml, render_batch_script,
+)
+from repro.core.remote import SchedulerSubmitter
+
+GOLDEN = Path(__file__).parent / "golden"
+
+ENTRIES = [
+    ("matmul 16 result_16N_1T.txt", {"OMP_NUM_THREADS": "1"}),
+    ("matmul 32 result_32N_2T.txt", {"OMP_NUM_THREADS": "2"}),
+]
+
+
+def make_dag(names, command="echo hi"):
+    dag = TaskDAG()
+    for name in names:
+        dag.add(TaskNode(id=name, task=name, combo={},
+                         payload={"command": command}))
+    return dag
+
+
+def render(node):
+    return node.payload["command"], {}
+
+
+class TestScriptRendering:
+    @pytest.mark.parametrize("kind", ["slurm", "pbs"])
+    def test_golden_script(self, kind):
+        script = render_batch_script(
+            kind, job_name="papas-demo", nnodes=2, ppnode=4,
+            entries=ENTRIES, spool="/spool")
+        golden = (GOLDEN / f"{kind}_n2_p4.sh").read_text()
+        assert script == golden
+
+    def test_slurm_directives(self):
+        script = render_batch_script(
+            "slurm", job_name="j", nnodes=2, ppnode=4,
+            entries=ENTRIES, spool="/s")
+        assert "#SBATCH --nodes=2" in script
+        assert "#SBATCH --ntasks-per-node=4" in script
+
+    def test_pbs_directives(self):
+        script = render_batch_script(
+            "pbs", job_name="j", nnodes=2, ppnode=4,
+            entries=ENTRIES, spool="/s")
+        assert "#PBS -l nodes=2:ppn=4" in script
+
+    def test_env_values_are_shell_quoted(self):
+        script = render_batch_script(
+            "slurm", job_name="j", nnodes=1, ppnode=1,
+            entries=[("run", {"MSG": "two words; rm -rf /"})], spool="/s")
+        assert "export MSG='two words; rm -rf /'" in script
+
+    def test_unknown_batch_kind(self):
+        with pytest.raises(ValueError, match="slurm"):
+            render_batch_script("lsf", job_name="j", nnodes=1, ppnode=1,
+                                entries=ENTRIES, spool="/s")
+
+
+class TestBatchPoolExecution:
+    def test_group_runs_inside_one_allocation(self, tmp_path):
+        pool = BatchWorkerPool(batch="slurm", nnodes=1, ppnode=4,
+                               render=render, submitter=LocalSubmitter(),
+                               spool_root=tmp_path)
+        assert pool.slots == 4
+        # one dispatch = one whole allocation: the scheduler must drive
+        # max_allocations lanes, not slots of them
+        assert pool.dispatch_slots == 1
+        dag = make_dag([f"t{i}" for i in range(4)])
+        sched = Scheduler(slots=pool.dispatch_slots)
+        try:
+            results = sched.execute(dag, runner=None, pool=pool)
+        finally:
+            pool.shutdown()
+        assert all(r.status == "ok" for r in results.values())
+        # one grouped allocation hosted all four tasks
+        hosts = {r.host for r in results.values()}
+        assert len(hosts) == 1
+        assert next(iter(hosts)).startswith("slurm:local")
+        for r in results.values():
+            assert r.value.returncode == 0
+            assert r.value.stdout.strip() == "hi"
+
+    def test_overflow_submits_sequential_allocations(self, tmp_path):
+        """More ready tasks than one allocation holds: groups are
+        submitted one after another (max_allocations=1), never
+        nnodes×ppnode simultaneous jobs."""
+        submitter = LocalSubmitter()
+        pool = BatchWorkerPool(batch="slurm", nnodes=1, ppnode=4,
+                               render=render, submitter=submitter,
+                               spool_root=tmp_path)
+        dag = make_dag([f"t{i}" for i in range(10)])
+        sched = Scheduler(slots=pool.dispatch_slots)
+        try:
+            results = sched.execute(dag, runner=None, pool=pool)
+        finally:
+            pool.shutdown()
+        assert all(r.status == "ok" for r in results.values())
+        # ceil(10 / 4) = 3 allocations total
+        assert len({r.host for r in results.values()}) == 3
+        assert submitter._n == 3
+
+    def test_take_claims_up_to_group_size(self, tmp_path):
+        pool = BatchWorkerPool(batch="slurm", nnodes=2, ppnode=2,
+                               render=render, submitter=LocalSubmitter(),
+                               spool_root=tmp_path)
+        try:
+            ready = [f"t{i}" for i in range(7)]
+            dag = make_dag(list(ready))
+            assert pool.take(ready, dag) == ["t0", "t1", "t2", "t3"]
+            assert ready == ["t4", "t5", "t6"]
+        finally:
+            pool.shutdown()
+
+    def test_nonzero_exit_classified_as_failure(self, tmp_path):
+        pool = BatchWorkerPool(batch="slurm", nnodes=1, ppnode=1,
+                               render=render, submitter=LocalSubmitter(),
+                               spool_root=tmp_path)
+        dag = make_dag(["bad"], command="exit 3")
+        sched = Scheduler(slots=1, max_retries=0)
+        try:
+            results = sched.execute(dag, runner=None, pool=pool)
+        finally:
+            pool.shutdown()
+        assert results["bad"].status == "failed"
+        assert "nonzero exit 3" in results["bad"].error
+
+    def test_pbs_pool_end_to_end(self, tmp_path):
+        pool = BatchWorkerPool(batch="pbs", nnodes=1, ppnode=2,
+                               render=render, submitter=LocalSubmitter(),
+                               spool_root=tmp_path)
+        dag = make_dag(["a", "b"])
+        sched = Scheduler(slots=pool.dispatch_slots)
+        try:
+            results = sched.execute(dag, runner=None, pool=pool)
+        finally:
+            pool.shutdown()
+        assert all(r.status == "ok" for r in results.values())
+        assert all(r.host.startswith("pbs:") for r in results.values())
+
+    def test_cancel_synthesizes_completion(self, tmp_path):
+        pool = BatchWorkerPool(batch="slurm", nnodes=1, ppnode=1,
+                               render=render, submitter=LocalSubmitter(),
+                               spool_root=tmp_path)
+        try:
+            node = TaskNode(id="slow", task="slow", combo={},
+                            payload={"command": "sleep 30"})
+            pool.submit(0, None, [node])
+            pool.cancel(0)
+            ev = pool.next_event(timeout=2)
+            assert ev is not None and ev.token == 0
+            assert "cancelled" in ev.errors[0]
+        finally:
+            pool.shutdown()
+
+    def test_submission_failure_fails_the_attempt(self, tmp_path):
+        class BrokenSubmitter(LocalSubmitter):
+            def submit(self, script):
+                raise RuntimeError("queue rejected the job")
+
+        pool = BatchWorkerPool(batch="slurm", nnodes=1, ppnode=1,
+                               render=render, submitter=BrokenSubmitter(),
+                               spool_root=tmp_path)
+        dag = make_dag(["x"])
+        sched = Scheduler(slots=1, max_retries=0)
+        try:
+            results = sched.execute(dag, runner=None, pool=pool)
+        finally:
+            pool.shutdown()
+        assert results["x"].status == "failed"
+        assert "queue rejected" in results["x"].error
+
+
+class TestStudyIntegration:
+    WDL = """
+    sweepit:
+      batch: slurm
+      nnodes: 2
+      ppnode: 4
+      environ:
+        N: ["1:4"]
+      command: echo n=${environ:N}
+    """
+
+    def test_wdl_batch_keywords_drive_the_pool(self, tmp_path):
+        study = ParameterStudy(parse_yaml(self.WDL), root=tmp_path,
+                               name="batchstudy")
+        results = study.run(pool="batch", submitter=LocalSubmitter())
+        assert len(results) == 4
+        assert all(r.status == "ok" for r in results.values())
+        assert all((r.host or "").startswith("slurm:") for r in results.values())
+        # the rendered submission script reflects batch: slurm, nnodes: 2,
+        # ppnode: 4 from the WDL
+        scripts = list((study.db.dir / "batch").glob("job*/job.sh"))
+        assert scripts
+        text = scripts[0].read_text()
+        assert "#SBATCH --nodes=2" in text
+        assert "#SBATCH --ntasks-per-node=4" in text
+        # journal carries the allocation identity per task
+        hosts = study.journal.hosts()
+        assert set(hosts) == set(results)
+
+
+class TestMakePool:
+    def test_slurm_kind(self, tmp_path):
+        pool = make_pool("slurm", nnodes=2, ppnode=3, render=render,
+                         submitter=LocalSubmitter(), spool_root=tmp_path)
+        try:
+            assert pool.slots == 6 and pool.batch == "slurm"
+        finally:
+            pool.shutdown()
+
+    def test_pbs_kind(self, tmp_path):
+        pool = make_pool("pbs", nnodes=1, ppnode=2, render=render,
+                         submitter=LocalSubmitter(), spool_root=tmp_path)
+        try:
+            assert pool.slots == 2 and pool.batch == "pbs"
+        finally:
+            pool.shutdown()
+
+    def test_scheduler_submitter_specs(self):
+        s = SchedulerSubmitter("slurm")
+        assert s.submit_cmd == ("sbatch",)
+        m = s.id_re.search("Submitted batch job 42")
+        assert m and m.group(1) == "42"
+        p = SchedulerSubmitter("pbs")
+        m = p.id_re.search("1234.head-node")
+        assert m and m.group(1) == "1234.head-node"

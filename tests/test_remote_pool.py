@@ -1,0 +1,283 @@
+"""SSH worker pool via the in-process LocalTransport fake: slot
+accounting (hosts × ppnode), out-of-order completion, host failure →
+quarantine + retry on another host, and the pool-level cancel hook that
+releases remote resources for abandoned dispatches."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    LocalTransport, ParameterStudy, Scheduler, ShellResult, SSHWorkerPool,
+    TaskDAG, TaskNode, make_pool, parse_yaml,
+)
+from repro.core.remote import SSHTransport
+
+
+def make_dag(names, command=None):
+    dag = TaskDAG()
+    for name in names:
+        dag.add(TaskNode(id=name, task=name, combo={},
+                         payload={"command": command or f"run {name}"}))
+    return dag
+
+
+def render(node):
+    return node.payload["command"], {}
+
+
+def run(dag, pool, **kw):
+    sched = Scheduler(slots=pool.slots, **kw)
+    try:
+        return sched.execute(dag, runner=None, pool=pool)
+    finally:
+        pool.shutdown()
+
+
+class TestSlotAccounting:
+    def test_slots_is_hosts_times_ppnode(self):
+        pool = SSHWorkerPool(["a", "b", "c"], ppnode=2,
+                             transport=LocalTransport(), render=render)
+        try:
+            assert pool.slots == 6
+        finally:
+            pool.shutdown()
+
+    def test_hosts_string_form(self):
+        pool = SSHWorkerPool("a, b", ppnode=2,
+                             transport=LocalTransport(), render=render)
+        try:
+            assert pool.slots == 4 and pool.hosts == ["a", "b"]
+        finally:
+            pool.shutdown()
+
+    def test_concurrency_bounded_per_host_and_global(self):
+        lock = threading.Lock()
+        cur = {"all": 0, "a": 0, "b": 0}
+        peak = {"all": 0, "a": 0, "b": 0}
+
+        def hook(host, command):
+            with lock:
+                cur["all"] += 1
+                cur[host] += 1
+                peak["all"] = max(peak["all"], cur["all"])
+                peak[host] = max(peak[host], cur[host])
+            time.sleep(0.03)
+            with lock:
+                cur["all"] -= 1
+                cur[host] -= 1
+            return ShellResult(0, host, "", 0.03)
+
+        pool = SSHWorkerPool(["a", "b"], ppnode=2,
+                             transport=LocalTransport(hook=hook),
+                             render=render)
+        results = run(make_dag([f"t{i:02d}" for i in range(16)]), pool)
+        assert all(r.status == "ok" for r in results.values())
+        assert peak["all"] <= 4 and peak["a"] <= 2 and peak["b"] <= 2
+        assert peak["all"] >= 2      # real overlap happened
+        hosts_used = {r.host for r in results.values()}
+        assert hosts_used == {"a", "b"}
+
+    def test_per_task_host_recorded(self):
+        pool = SSHWorkerPool(["x1", "x2"], ppnode=1,
+                             transport=LocalTransport(
+                                 hook=lambda h, c: ShellResult(0, h, "", 0)),
+                             render=render)
+        results = run(make_dag(["p", "q", "r"]), pool)
+        for r in results.values():
+            assert r.host in ("x1", "x2")
+            assert r.value.stdout == r.host
+
+
+class TestOutOfOrderCompletion:
+    def test_slow_first_dispatch_finishes_last(self):
+        def hook(host, command):
+            time.sleep(0.2 if "aa" in command else 0.01)
+            return ShellResult(0, "", "", 0)
+
+        pool = SSHWorkerPool(["h1", "h2"], ppnode=1,
+                             transport=LocalTransport(hook=hook),
+                             render=render)
+        results = run(make_dag(["aa", "bb", "cc", "dd"]), pool)
+        assert all(r.status == "ok" for r in results.values())
+        # "aa" dispatched first but completed after later tasks
+        assert results["aa"].finished > results["dd"].finished
+
+
+class TestHostFailure:
+    def test_failed_host_quarantined_and_tasks_retry_elsewhere(self):
+        # the good host works slowly so the bad lane is guaranteed to
+        # pick up at least one task from the queue before it drains
+        def hook(h, c):
+            time.sleep(0.05)
+            return ShellResult(0, h, "", 0)
+
+        pool = SSHWorkerPool(["bad", "good"], ppnode=1,
+                             transport=LocalTransport(
+                                 fail_hosts=["bad"], hook=hook),
+                             render=render)
+        results = run(make_dag(["t1", "t2", "t3", "t4", "t5", "t6"]), pool,
+                      max_retries=2)
+        assert all(r.status == "ok" for r in results.values())
+        assert {r.host for r in results.values()} == {"good"}
+        assert pool.dead_hosts == {"bad"}
+        retried = [r for r in results.values() if r.attempts > 1]
+        assert retried, "the bad host should have failed at least one attempt"
+
+    def test_all_hosts_down_terminates_with_failures(self):
+        pool = SSHWorkerPool(["a", "b"], ppnode=1,
+                             transport=LocalTransport(fail_hosts=["a", "b"]),
+                             render=render)
+        results = run(make_dag(["t1", "t2", "t3"]), pool, max_retries=1)
+        assert all(r.status in ("failed", "skipped")
+                   for r in results.values())
+        failed = [r for r in results.values() if r.status == "failed"]
+        assert failed and all("host" in (r.error or "")
+                              or "no live hosts" in (r.error or "")
+                              for r in failed)
+
+    def test_missing_command_fails_cleanly(self):
+        dag = TaskDAG()
+        dag.add(TaskNode(id="n", task="n", combo={}, payload={}))
+        pool = SSHWorkerPool(["h"], ppnode=1, transport=LocalTransport(),
+                             render=lambda node: (None, {}))
+        results = run(dag, pool, max_retries=0)
+        assert results["n"].status == "failed"
+        assert "no shell command" in results["n"].error
+
+
+class TestCancel:
+    def test_cancel_releases_host_slot(self):
+        gate = threading.Event()
+
+        def hook(host, command):
+            if command == "run blocked":
+                gate.wait(5)
+            return ShellResult(0, "", "", 0)
+
+        pool = SSHWorkerPool(["h"], ppnode=1,
+                             transport=LocalTransport(hook=hook),
+                             render=render)
+        try:
+            blocked = TaskNode(id="blocked", task="blocked", combo={},
+                               payload={"command": "run blocked"})
+            after = TaskNode(id="after", task="after", combo={},
+                             payload={"command": "run after"})
+            pool.submit(0, None, [blocked])
+            time.sleep(0.05)
+            pool.cancel(0)
+            gate.set()
+            ev = pool.next_event(timeout=2)
+            assert ev is not None and ev.token == 0
+            # the lane is free again: new work flows
+            pool.submit(1, None, [after])
+            ev = pool.next_event(timeout=2)
+            assert ev is not None and ev.token == 1 and ev.errors == [None]
+        finally:
+            pool.shutdown()
+
+    def test_speculative_loser_gets_pool_cancel(self):
+        lock = threading.Lock()
+        gate = threading.Event()
+        attempts = {"n": 0}
+
+        def hook(host, command):
+            if command == "run zz":
+                with lock:
+                    attempts["n"] += 1
+                    first = attempts["n"] == 1
+                if first:
+                    gate.wait(10)     # the straggler copy
+                return ShellResult(0, "zz", "", 0)
+            time.sleep(0.05)
+            return ShellResult(0, "", "", 0)
+
+        class SpyPool(SSHWorkerPool):
+            cancelled: list = []
+
+            def cancel(self, token):
+                SpyPool.cancelled.append(token)
+                super().cancel(token)
+
+        SpyPool.cancelled = []
+        pool = SpyPool(["h1", "h2"], ppnode=1,
+                       transport=LocalTransport(hook=hook), render=render)
+        dag = make_dag([f"a{i}" for i in range(6)] + ["zz"])
+        try:
+            sched = Scheduler(slots=pool.slots, speculate=True,
+                              straggler_factor=2.0, max_retries=1)
+            results = sched.execute(dag, runner=None, pool=pool)
+            assert results["zz"].status == "ok"
+            assert results["zz"].speculative
+            assert SpyPool.cancelled, \
+                "losing duplicate must be cancelled at the pool"
+        finally:
+            gate.set()
+            pool.shutdown()
+
+
+class TestStudyIntegration:
+    WDL = """
+    ping:
+      environ:
+        MODE: ["x", "y"]
+      n: ["1:2"]
+      command: echo ${n}.${environ:MODE}
+    """
+
+    def test_study_over_ssh_pool_records_journal_hosts(self, tmp_path):
+        study = ParameterStudy(parse_yaml(self.WDL), root=tmp_path,
+                               name="sshstudy")
+        results = study.run(pool="ssh", hosts=["a", "b"], ppnode=2,
+                            transport=LocalTransport())
+        assert len(results) == 4
+        assert all(r.status == "ok" for r in results.values())
+        assert {r.host for r in results.values()} <= {"a", "b"}
+        hosts = study.journal.hosts()
+        assert set(hosts) == set(results)
+        assert set(hosts.values()) <= {"a", "b"}
+        # provenance records carry the host too
+        recs = {r["task_id"]: r for r in study.db.records()}
+        assert all(recs[rid]["host"] in ("a", "b") for rid in results)
+
+    def test_wdl_hosts_keyword_drives_the_pool(self, tmp_path):
+        wdl = """
+        ping:
+          hosts: [u, v]
+          ppnode: 2
+          n: ["1:2"]
+          command: echo ${n}
+        """
+        study = ParameterStudy(parse_yaml(wdl), root=tmp_path, name="wdlhosts")
+        results = study.run(pool="ssh", transport=LocalTransport())
+        assert {r.host for r in results.values()} <= {"u", "v"}
+        assert all(r.status == "ok" for r in results.values())
+
+
+class TestMakePool:
+    def test_unknown_kind_lists_valid_kinds(self):
+        with pytest.raises(ValueError) as ei:
+            make_pool("bogus")
+        msg = str(ei.value)
+        for kind in ("inline", "thread", "process", "ssh", "slurm", "pbs"):
+            assert kind in msg
+
+    def test_ssh_requires_hosts(self):
+        with pytest.raises(ValueError, match="hosts"):
+            make_pool("ssh")
+
+    def test_ssh_kind_constructs_pool(self):
+        pool = make_pool("ssh", hosts=["a"], ppnode=3,
+                         transport=LocalTransport(), render=render)
+        try:
+            assert pool.kind == "ssh" and pool.slots == 3
+        finally:
+            pool.shutdown()
+
+
+class TestSSHTransportCommand:
+    def test_remote_command_inlines_env_and_cwd(self):
+        cmd = SSHTransport.remote_command(
+            "run --x 1", {"A": "1", "B": "two words"}, "/work dir")
+        assert cmd == ("export A=1; export B='two words'; "
+                       "cd '/work dir' && run --x 1")
