@@ -6,13 +6,20 @@ throughput at growing N_W, DAG build + topological order, provenance
 write overhead per task — plus the engine-backend comparison: serial vs
 thread-pool vs process-pool makespan on a sleep-task DAG (the paper's
 "increasing resource utilization" claim, §4.2/§4.3, measured for real).
+
+The streaming rows quantify the windowed pipeline: startup-to-first-
+dispatch for a 10^5-combination study, eager (materialize + build the
+whole DAG + v1 journal) vs windowed (index addressing + bounded
+admission + v2 journal), and the journal footprint of each format.
 """
 from __future__ import annotations
 
+import tempfile
 import time
+from pathlib import Path
 
-from repro.core import LocalTransport, ParameterStudy, Scheduler, TaskDAG, \
-    TaskNode, make_pool, parse_yaml
+from repro.core import InlinePool, LocalTransport, ParameterStudy, Scheduler, \
+    StudyJournal, TaskDAG, TaskNode, make_pool, parse_yaml
 
 N_SLEEP = 32
 SLEEP_S = 0.05
@@ -34,6 +41,74 @@ t:
     c: ["1:10"]
   command: run ${args:a} ${args:b} ${args:c}
 """
+
+
+#: 100 × 100 × 10 = 10^5 combinations — large enough that eager
+#: materialization dominates, small enough to benchmark its startup.
+WDL_HUGE = """
+t:
+  args:
+    a: ["1:100"]
+    b: ["1:100"]
+    c: ["1:10"]
+  command: run ${args:a} ${args:b} ${args:c}
+"""
+
+
+class _FirstDispatch(Exception):
+    """Raised by the probe pool at the first submit to stop the run."""
+
+
+class _ProbePool(InlinePool):
+    """Measures startup latency: aborts the engine at the first dispatch,
+    so the elapsed time is pure expansion + DAG + journal + scheduling
+    setup with zero task execution."""
+
+    def submit(self, token, runner, nodes):
+        raise _FirstDispatch
+
+
+def _first_dispatch_s(study: ParameterStudy, window: int | None) -> float:
+    t0 = time.perf_counter()
+    try:
+        study.run(pool=_ProbePool(), window=window)
+    except _FirstDispatch:
+        pass
+    return time.perf_counter() - t0
+
+
+def _streaming_rows() -> list[tuple[str, float, dict]]:
+    """Startup-to-first-dispatch at 10^5 combos: eager vs windowed."""
+    rows = []
+    with tempfile.TemporaryDirectory() as root:
+        eager = ParameterStudy(parse_yaml(WDL_HUGE), root=root, name="eager")
+        n = eager.instance_count()
+        eager_s = _first_dispatch_s(eager, window=None)
+        windowed = ParameterStudy(parse_yaml(WDL_HUGE), root=root,
+                                  name="windowed")
+        windowed_s = _first_dispatch_s(windowed, window=64)
+        rows.append(("engine_first_dispatch_eager_1e5", eager_s * 1e6,
+                     {"n": n, "wall_s": round(eager_s, 3)}))
+        rows.append(("engine_first_dispatch_windowed_1e5", windowed_s * 1e6,
+                     {"n": n, "window": 64, "wall_s": round(windowed_s, 4)}))
+        rows.append(("engine_windowed_startup_speedup", 0.0,
+                     {"speedup": round(eager_s / windowed_s, 1),
+                      "meets_10x": eager_s / windowed_s >= 10}))
+
+        # journal footprint: v1 carries the instance list, v2 carries
+        # range-compressed completed indices — O(N_W) vs O(ranges)
+        space = eager.space()
+        insts = eager.instances()
+        j1 = StudyJournal(Path(root) / "v1.json")
+        j1.save(insts, {f"t@{i}" for i in range(n)}, {})
+        j2 = StudyJournal(Path(root) / "v2.json")
+        j2.save_indexed(space.space_hash(), n, {"t": range(n)}, {})
+        v1_bytes = j1.path.stat().st_size
+        v2_bytes = j2.path.stat().st_size
+        rows.append(("engine_journal_bytes_1e5_complete", 0.0,
+                     {"v1": v1_bytes, "v2": v2_bytes,
+                      "ratio": round(v1_bytes / v2_bytes)}))
+    return rows
 
 
 def _sleep_node(node) -> str:
@@ -149,6 +224,7 @@ def run() -> list[tuple[str, float, dict]]:
     rows.append(("engine_run_overhead_per_task", total_us / len(res),
                  {"n": len(res), "includes": "journal+provenance"}))
 
+    rows.extend(_streaming_rows())
     rows.extend(_makespan_rows())
     return rows
 

@@ -13,8 +13,17 @@ becomes a *shell command* dispatched to a ``hosts × ppnode`` slot over
 the no-network ``LocalTransport`` fake (commands execute locally, host
 identity and slot accounting preserved) — the CI smoke for the paper's
 distributed parallelization (§4.3).
+
+    PYTHONPATH=src python examples/quickstart.py --window 64
+
+runs a 16 000-combination study through the *streaming* pipeline:
+instances are addressed by space index (never materialized), at most
+``slots + window`` task nodes stay live, and the journal is compact v2 —
+the smoke prints wall time, peak RSS, and the asserted live-node bound.
 """
 import argparse
+import resource
+import time
 
 import numpy as np
 
@@ -69,12 +78,58 @@ def run_remote(hosts: str, ppnode: int) -> None:
     print(f"[ssh] journal records hosts for {len(journal_hosts)} tasks")
 
 
+# streaming smoke: a 40 × 40 × 10 = 16 000-combination space, run with a
+# bounded admission window — large enough that eager materialization
+# would dominate startup, small enough for a CI gate
+WINDOW_WDL = """
+sweep:
+  args:
+    a: ["1:40"]
+    b: ["1:40"]
+    c: ["1:10"]
+  command: noop ${args:a} ${args:b} ${args:c}
+"""
+
+
+def run_windowed(window: int, slots: int = 4) -> None:
+    study = ParameterStudy(parse_yaml(WINDOW_WDL),
+                           registry={"sweep": lambda combo: 0},
+                           root="/tmp/papas_quickstart",
+                           name=f"quickstart_window{window}")
+    n = study.instance_count()
+    t0 = time.perf_counter()
+    results = study.run(window=window, slots=slots)
+    wall = time.perf_counter() - t0
+    ok = sum(1 for r in results.values() if r.status == "ok")
+    stats = study.last_run_stats
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    print(f"[window] {ok}/{n} instances in {wall:.1f}s "
+          f"({n / max(wall, 1e-9):.0f} tasks/s), peak RSS {rss_mb:.0f} MB")
+    print(f"[window] peak live nodes {stats['peak_live_nodes']} "
+          f"(bound: slots + window = {slots + window})")
+    assert ok == n, "windowed smoke: tasks failed"
+    assert stats["peak_live_nodes"] <= slots + window, \
+        "windowed smoke: admission window exceeded"
+    import json
+    doc = json.loads(study.journal.path.read_text())
+    assert doc["version"] == 2 and "instances" not in doc, \
+        "windowed smoke: expected compact v2 journal"
+    print(f"[window] journal v2: {study.journal.path.stat().st_size} bytes "
+          f"for {n} instances (completed ranges: {doc['completed']})")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--pool", default="inline", choices=("inline", "ssh"))
     ap.add_argument("--hosts", default="localhost")
     ap.add_argument("--ppnode", type=int, default=2)
+    ap.add_argument("--window", type=int, default=None,
+                    help="run the 16k-combo streaming smoke with this "
+                         "admission window")
     args = ap.parse_args()
+    if args.window is not None:
+        run_windowed(args.window)
+        return
     if args.pool == "ssh":
         run_remote(args.hosts, args.ppnode)
         return

@@ -14,8 +14,20 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
     tests/test_remote_pool.py tests/test_batch_pool.py
 
+# streaming pipeline: indexed addressing, windowed admission, journal v2
+# — also pinned by name so collection changes cannot drop them
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+    tests/test_streaming_space.py tests/test_windowed_engine.py \
+    tests/test_journal_v2.py
+
 # end-to-end smoke: a study through the SSH worker pool (hosts × ppnode
 # slots, LocalTransport fake — commands run locally, no network), with
 # per-task hosts asserted in the journal by the example itself
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py \
     --pool ssh --hosts localhost --ppnode 2
+
+# large-space streaming smoke: a 16k-combination study through windowed
+# admission — asserts the live-node bound + compact v2 journal, prints
+# wall time and peak RSS for eyeballing regressions
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py \
+    --window 64

@@ -39,8 +39,8 @@ from .scheduler import (
     makespan,
 )
 from .staging import collect_outputs, stage_instance
-from .state import StudyJournal
-from .study import ParameterStudy, load_study
+from .state import JournalState, StudyJournal, compress_ranges, expand_ranges
+from .study import InstanceWindow, ParameterStudy, load_study
 from .viz import to_ascii, to_dot
 from .wdl import (
     RESERVED_KEYWORDS,
@@ -69,8 +69,9 @@ __all__ = [
     "StudyDB", "config_hash",
     "ScheduleEvent", "Scheduler", "TaskResult", "VirtualClock", "VirtualPool",
     "dispatch_count", "makespan",
-    "StudyJournal", "collect_outputs", "stage_instance",
-    "ParameterStudy", "load_study",
+    "JournalState", "StudyJournal", "compress_ranges", "expand_ranges",
+    "collect_outputs", "stage_instance",
+    "InstanceWindow", "ParameterStudy", "load_study",
     "to_ascii", "to_dot",
     "RESERVED_KEYWORDS", "StudySpec", "TaskSpec", "WDLError", "merge",
     "parse_dict", "parse_file", "parse_ini", "parse_json", "parse_range",

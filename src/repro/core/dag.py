@@ -3,6 +3,7 @@ whose nodes are indivisible tasks; ``after`` declares prerequisites)."""
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Any, Iterable, Iterator, Mapping
 
 
@@ -47,20 +48,22 @@ class TaskDAG:
         return succ
 
     def topological(self) -> Iterator[TaskNode]:
-        """Kahn's algorithm; raises DAGError on a cycle."""
+        """Kahn's algorithm over a min-heap ready queue (smallest id
+        first, so the order matches a sorted list at O(V log V) instead
+        of re-sorting per pop); raises DAGError on a cycle."""
         indeg = {nid: len(n.deps) for nid, n in self.nodes.items()}
         succ = self.successors()
-        ready = sorted(nid for nid, d in indeg.items() if d == 0)
+        ready = [nid for nid, d in indeg.items() if d == 0]
+        heapq.heapify(ready)
         emitted = 0
         while ready:
-            nid = ready.pop(0)
+            nid = heapq.heappop(ready)
             emitted += 1
             yield self.nodes[nid]
             for s in succ[nid]:
                 indeg[s] -= 1
                 if indeg[s] == 0:
-                    ready.append(s)
-            ready.sort()
+                    heapq.heappush(ready, s)
         if emitted != len(self.nodes):
             cyclic = [nid for nid, d in indeg.items() if d > 0]
             raise DAGError(f"cycle detected among {sorted(cyclic)[:8]}")

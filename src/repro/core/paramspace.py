@@ -7,10 +7,18 @@ factor; ``sampling`` selects a subset of the resulting combination space.
 The expansion is deterministic: parameters iterate in declaration order,
 row-major, with fixed groups hoisted to the outermost loops (matching the
 paper's "move fixed parameters into the outermost loop structures").
+
+Because the order is a plain mixed-radix counter over the loop factors,
+every combination has an integer address: ``combo_at(i)`` decodes index
+``i`` in O(#factors) without enumerating anything, ``index_of(combo)``
+is its inverse, and ``iter_sample()`` streams the post-``sampling``
+subset as indices — the basis for studies over spaces far too large to
+materialize (millions of combinations cost no startup memory).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 import itertools
 import json
@@ -27,6 +35,10 @@ class ParameterSpace:
     sampling: dict[str, Any] | None = None
 
     def __post_init__(self) -> None:
+        if self.sampling:
+            method = str(self.sampling.get("method", "uniform")).lower()
+            if method not in ("uniform", "random"):
+                raise ValueError(f"unknown sampling method {method!r}")
         seen: set[str] = set()
         for group in self.fixed:
             lens = {len(self.params[p]) for p in group}
@@ -75,33 +87,128 @@ class ParameterSpace:
             flat = tuple(v for tup in combo for v in tup)
             yield dict(zip(names, flat))
 
-    def sample(self, seed: int | None = None) -> list[dict[str, Any]]:
-        """Apply the ``sampling`` keyword: subset of the combination space.
+    # -- O(1) indexed addressing ----------------------------------------
+    @functools.cached_property
+    def _addressing(self) -> tuple[list[tuple[tuple[str, ...], list[tuple[Any, ...]]]],
+                                   list[str], list[int]]:
+        """Cached (factors, flat names, radices) — the mixed-radix digit
+        plan shared by ``combo_at`` and ``index_of``."""
+        factors = self._factors()
+        names = [n for grp, _ in factors for n in grp]
+        radices = [len(vals) for _, vals in factors]
+        return factors, names, radices
 
-        ``method: uniform`` takes every k-th combination to reach the
-        requested count; ``method: random`` draws without replacement.
-        ``count`` (int) or ``fraction`` (0..1] select the subset size.
-        """
-        combos = list(self.combinations())
+    def combo_at(self, index: int) -> dict[str, Any]:
+        """Decode combination ``index`` (row-major mixed radix, matching
+        ``combinations()`` order) without enumerating the space."""
+        n = self.size()
+        if not 0 <= index < n:
+            raise IndexError(f"combination index {index} out of range [0, {n})")
+        factors, names, radices = self._addressing
+        digits: list[int] = [0] * len(radices)
+        rem = index
+        for pos in range(len(radices) - 1, -1, -1):
+            rem, digits[pos] = divmod(rem, radices[pos])
+        flat = tuple(v for (_, vals), d in zip(factors, digits)
+                     for v in vals[d])
+        return dict(zip(names, flat))
+
+    @functools.cached_property
+    def _value_index(self) -> list[dict[Any, int] | None]:
+        """Per-factor value-tuple → digit maps (``None`` where a value is
+        unhashable; ``index_of`` falls back to a linear scan there)."""
+        factors, _, _ = self._addressing
+        maps: list[dict[Any, int] | None] = []
+        for _, vals in factors:
+            try:
+                maps.append({v: i for i, v in enumerate(vals)})
+            except TypeError:
+                maps.append(None)
+        return maps
+
+    def index_of(self, combo: Mapping[str, Any]) -> int:
+        """Inverse of ``combo_at``: the row-major index of ``combo``.
+        Raises ``KeyError``/``ValueError`` when the combination does not
+        belong to this space."""
+        factors, _, _ = self._addressing
+        index = 0
+        for (group, vals), vmap in zip(factors, self._value_index):
+            tup = tuple(combo[p] for p in group)
+            if vmap is not None:
+                digit = vmap.get(tup)
+                if digit is None:
+                    raise ValueError(
+                        f"combination value {tup!r} for {group} is not in "
+                        f"this parameter space")
+            else:
+                try:
+                    digit = vals.index(tup)
+                except ValueError:
+                    raise ValueError(
+                        f"combination value {tup!r} for {group} is not in "
+                        f"this parameter space") from None
+            index = index * len(vals) + digit
+        return index
+
+    def space_hash(self) -> str:
+        """Stable short hash of the declared space (params + fixed +
+        sampling) — journal v2 uses it to pair a resume with its study."""
+        blob = json.dumps(
+            {"params": self.params, "fixed": self.fixed,
+             "sampling": self.sampling},
+            sort_keys=True, default=str)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    # -- sampling -------------------------------------------------------
+    def sample_count(self) -> int:
+        """Post-``sampling`` instance count, computed without enumerating
+        the combination space."""
+        n = self.size()
         if not self.sampling:
-            return combos
-        method = str(self.sampling.get("method", "uniform")).lower()
+            return n
         if "count" in self.sampling:
             k = int(self.sampling["count"])
         elif "fraction" in self.sampling:
-            k = max(1, int(round(float(self.sampling["fraction"]) * len(combos))))
+            k = max(1, int(round(float(self.sampling["fraction"]) * n)))
         else:
-            k = len(combos)
-        k = min(k, len(combos))
+            k = n
+        return min(k, n)
+
+    def iter_sample(self, seed: int | None = None) -> Iterator[int]:
+        """Stream the post-``sampling`` subset as combination *indices*,
+        in deterministic order, without materializing the space.
+
+        ``method: uniform`` strides the index range to reach the
+        requested count; ``method: random`` draws indices without
+        replacement (O(k) via ``random.sample`` over a lazy ``range``).
+        ``count`` (int) or ``fraction`` (0..1] select the subset size.
+        """
+        n = self.size()
+        if not self.sampling:
+            yield from range(n)
+            return
+        method = str(self.sampling.get("method", "uniform")).lower()
+        k = self.sample_count()
         if method == "uniform":
-            if k == len(combos):
-                return combos
-            stride = len(combos) / k
-            return [combos[int(i * stride)] for i in range(k)]
+            if k == n:
+                yield from range(n)
+                return
+            stride = n / k
+            for i in range(k):
+                yield int(i * stride)
+            return
         if method == "random":
-            rng = random.Random(self.sampling.get("seed", seed if seed is not None else 0))
-            return rng.sample(combos, k)
+            rng = random.Random(
+                self.sampling.get("seed", seed if seed is not None else 0))
+            yield from rng.sample(range(n), k)
+            return
         raise ValueError(f"unknown sampling method {method!r}")
+
+    def sample(self, seed: int | None = None) -> list[dict[str, Any]]:
+        """Apply the ``sampling`` keyword: subset of the combination space
+        (materialized; prefer ``iter_sample``/``combo_at`` for large
+        spaces)."""
+        return [self.combo_at(i) for i in self.iter_sample(seed)]
 
 
 def combo_id(combo: Mapping[str, Any]) -> str:

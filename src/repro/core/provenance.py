@@ -62,8 +62,12 @@ class StudyDB:
         runtime: float,
         combo: Mapping[str, Any] | None = None,
         metrics: Mapping[str, Any] | None = None,
+        index: int | None = None,
         **extra: Any,
     ) -> None:
+        """Append one attempt record.  ``index`` is the instance's space
+        index (streaming runs) — it lets downstream tooling address the
+        combination without re-expanding the space."""
         rec = {
             "task_id": task_id,
             "status": status,
@@ -74,6 +78,8 @@ class StudyDB:
             "timestamp": time.time(),
             **extra,
         }
+        if index is not None:
+            rec["index"] = int(index)
         line = json.dumps(rec, default=str) + "\n"
         with self._lock, self.records_path.open("a") as f:
             f.write(line)
@@ -91,6 +97,16 @@ class StudyDB:
 
     def completed_ids(self) -> set[str]:
         return {r["task_id"] for r in self.records() if r["status"] == "ok"}
+
+    def completed_indices(self) -> dict[str, set[int]]:
+        """Task name → completed instance space indices (streaming runs
+        record the index per attempt; eager records carry none)."""
+        out: dict[str, set[int]] = {}
+        for r in self.records():
+            if r["status"] == "ok" and r.get("index") is not None:
+                task = r["task_id"].partition("@")[0]
+                out.setdefault(task, set()).add(int(r["index"]))
+        return out
 
     # -- profiler summary --------------------------------------------------
     def runtime_summary(self) -> dict[str, Any]:

@@ -36,6 +36,16 @@ Concurrency-relevant semantics:
   ``straggler_factor ×`` the median completed runtime gets a duplicate
   dispatch; the first finisher wins (``TaskResult.speculative`` marks a
   duplicate win) and the loser is abandoned.
+
+Streaming admission: ``execute(..., source=…, window=N)`` turns the
+whole-DAG loop into a bounded frontier.  ``source.next_subdag()`` yields
+one *self-contained* instance sub-DAG at a time (all deps internal to
+the batch); the loop admits a sub-DAG only when it fits within the
+``slots + window`` live-node budget, and retires each node's
+``TaskNode`` the moment it resolves — so live graph state stays
+O(slots + window) no matter how many combinations the study spans.
+Retries, failure closure, timeouts, and speculation all apply unchanged;
+the eager path (``source=None``) is byte-for-byte the old behavior.
 """
 from __future__ import annotations
 
@@ -47,7 +57,7 @@ import random
 import time
 from typing import Any, Callable, Mapping
 
-from .dag import TaskDAG, TaskNode
+from .dag import DAGError, TaskDAG, TaskNode
 from .executors import CompletionEvent, InlinePool, WorkerPool
 
 
@@ -186,6 +196,9 @@ class Scheduler:
         self.clock = clock
         self.order = order
         self.speculate = speculate
+        #: live-node high-water mark of the last run (streaming admission
+        #: bounds it near ``slots + window``; eager runs see the full DAG)
+        self.peak_live_nodes = 0
 
     # ------------------------------------------------------------------
     def _order_key(self, nid: str) -> tuple[str, ...]:
@@ -222,6 +235,8 @@ class Scheduler:
         completed: set[str] | None = None,
         on_result: Callable[[TaskResult], None] | None = None,
         pool: WorkerPool | None = None,
+        source: Any = None,
+        window: int | None = None,
     ) -> dict[str, TaskResult]:
         """Run every node once its deps are satisfied.
 
@@ -232,14 +247,32 @@ class Scheduler:
         rather than aborting the study (fault isolation, paper §4.1).
         ``pool`` selects the backend (default: a fresh ``InlinePool``);
         ``on_result`` fires on the event-loop thread as nodes resolve.
+
+        ``source`` + ``window`` enable streaming admission: ``source``
+        must expose ``next_subdag() -> (nodes, done_ids) | None``
+        yielding one self-contained instance sub-DAG per call (every dep
+        internal to the batch or listed in ``done_ids``), and the loop
+        keeps at most ``slots + window`` unresolved nodes live — a
+        fetched sub-DAG that would overflow the budget waits until
+        resolved nodes retire.  (Sole exception: when one sub-DAG is
+        bigger than the whole budget it is still admitted, whole, once
+        nothing else is live — progress beats the bound.)  ``on_result``
+        fires before its node is retired, so callbacks may still read
+        ``dag.nodes[res.id]``.  ``self.peak_live_nodes`` records the
+        high-water mark after a run.
         """
+        if (source is None) != (window is None):
+            raise ValueError("source and window must be passed together")
+        if window is not None and window < 1:
+            raise ValueError("window must be >= 1")
         dag.validate()
         completed = set(completed or ())
         own_pool = pool is None
         if pool is None:
             pool = InlinePool()
         try:
-            return self._event_loop(dag, runner, completed, on_result, pool)
+            return self._event_loop(dag, runner, completed, on_result, pool,
+                                    source, window)
         finally:
             if own_pool:
                 pool.shutdown()
@@ -252,7 +285,10 @@ class Scheduler:
         completed: set[str],
         on_result: Callable[[TaskResult], None] | None,
         pool: WorkerPool,
+        source: Any = None,
+        window: int | None = None,
     ) -> dict[str, TaskResult]:
+        streaming = source is not None
         succ = dag.successors()
         indeg = {nid: sum(1 for d in n.deps if d not in completed)
                  for nid, n in dag.nodes.items()}
@@ -266,6 +302,11 @@ class Scheduler:
         ready = [nid for nid in dag.nodes
                  if nid not in completed and indeg[nid] == 0]
         self._sort_ready(ready)
+
+        #: every admitted node eventually lands in ``results``
+        expected = len(dag.nodes)
+        exhausted = not streaming
+        self.peak_live_nodes = len(dag.nodes)
 
         failed_closure: set[str] = set()
         attempts: dict[str, int] = {}
@@ -287,16 +328,80 @@ class Scheduler:
                         failed_closure.add(s)
                         stack.append(s)
 
+        def _retire(nid: str) -> None:
+            # streaming only: a resolved node's TaskNode leaves the live
+            # graph so admission can refill the freed window capacity
+            if not streaming:
+                return
+            dag.nodes.pop(nid, None)
+            succ.pop(nid, None)
+            indeg.pop(nid, None)
+
         def _resolve(res: TaskResult) -> None:
             results[res.id] = res
             if res.status == "ok":
                 runtimes.append(res.runtime)
             if on_result:
-                on_result(res)
+                on_result(res)      # node still live: dag.nodes[res.id] ok
             for s in succ[res.id]:
                 indeg[s] -= 1
                 if indeg[s] == 0 and s not in results:
                     bisect.insort(ready, s, key=self._order_key)
+            _retire(res.id)
+
+        pending: list[Any] = []     # fetched sub-DAG awaiting window room
+
+        def _admit(force: bool = False) -> bool:
+            """Pull instance sub-DAGs from the source while they fit in
+            the ``slots + window`` live-node budget; a fetched sub-DAG
+            that does not fit waits in ``pending`` so the bound stays
+            strict.  ``force`` admits one batch regardless (progress
+            guarantee when the whole budget is smaller than one
+            instance).  Returns True when anything was admitted."""
+            nonlocal expected, exhausted
+            admitted_any = False
+            while not (exhausted and not pending):
+                if not pending:
+                    item = source.next_subdag()
+                    if item is None:
+                        exhausted = True
+                        break
+                    pending.append(item)
+                nodes, done_ids = pending[0]
+                live_after = len(dag.nodes) + sum(
+                    1 for n in nodes if n.id not in done_ids)
+                if live_after > self.slots + window and not (
+                        force and not admitted_any):
+                    break
+                pending.pop(0)
+                for node in nodes:
+                    dag.add(node)
+                    succ[node.id] = []
+                for node in nodes:
+                    for d in node.deps:
+                        if d not in succ:
+                            raise DAGError(
+                                f"streamed node {node.id!r}: dependency "
+                                f"{d!r} is outside its instance sub-DAG")
+                        succ[d].append(node.id)
+                    indeg[node.id] = sum(
+                        1 for d in node.deps
+                        if d not in done_ids and d not in completed)
+                expected += len(nodes)
+                admitted_any = True
+                for node in nodes:
+                    if node.id in done_ids:
+                        # already complete (resume): resolved silently,
+                        # exactly like eager pre-completed nodes
+                        results[node.id] = TaskResult(
+                            id=node.id, status="ok", runtime=0.0,
+                            started=0.0, finished=0.0, attempts=0)
+                        _retire(node.id)
+                    elif indeg[node.id] == 0:
+                        bisect.insort(ready, node.id, key=self._order_key)
+                self.peak_live_nodes = max(self.peak_live_nodes,
+                                           len(dag.nodes))
+            return admitted_any
 
         def _abandon(token: int) -> None:
             # The worker may still be busy: the slot stays occupied until
@@ -388,7 +493,10 @@ class Scheduler:
             med = sorted(runtimes)[len(runtimes) // 2]
             return med if med > 0 else None
 
-        while len(results) < len(dag.nodes):
+        while True:
+            _admit()
+            if exhausted and not pending and len(results) >= expected:
+                break
             # resolve failure-closure nodes without occupying slots
             while True:
                 doomed = [nid for nid in ready if nid in failed_closure]
@@ -424,7 +532,10 @@ class Scheduler:
             if not running and not abandoned:
                 if ready:
                     continue
-                # nothing running or ready → remaining deps unsatisfiable
+                if _admit(force=True):
+                    continue        # window was full of doomed/blocked work
+                # nothing running, ready, or admittable → remaining deps
+                # unsatisfiable
                 for nid in sorted(set(dag.nodes) - set(results)):
                     if nid not in results:
                         _skip(nid)

@@ -1,24 +1,68 @@
-"""Study checkpoint/restart journal (paper §4.1).
+"""Study checkpoint/restart journal (paper §4.1) — now streaming-aware.
 
 "PaPaS provides checkpoint-restart functionality in case of fault or a
 deliberate pause/stop operation.  A parameter study's state can be saved
 in a workflow file and reloaded at a later time."
 
-The journal is a JSON base document (the study's expanded instance list
-plus the completions known when it was written) and an append-only
-sidecar log of task ids completed since.  Recording one completion is an
-O(1) append — not a full rewrite of the study state — so journaling
-stays cheap for long sweeps and safe when results arrive from a
-concurrent engine (a lock serializes writers; base writes stay atomic
-via tmp + rename).  ``load()`` folds the log back into the base.
+Two on-disk formats share one append-only design:
+
+* **v1 (legacy, eager)** — the base document stores the study's fully
+  expanded instance list plus the completed node ids known when it was
+  written.  O(N_W) bytes per compaction; still written by the eager
+  (non-windowed) execution path and always readable.
+* **v2 (compact, streaming)** — the base document stores the *space
+  hash* (pairing the journal with its declared parameter space), the
+  instance count, and per-task completed instance **indices**
+  range-compressed to ``[[start, end], ...]`` spans.  A long sweep that
+  completed instances 0..99999 journals as one two-integer range, not
+  10^5 combos — O(completed ranges), never O(N_W).
+
+Either way, recording one completion is an O(1) locked append to a
+sidecar log — not a rewrite of the base — so journaling stays cheap for
+long sweeps and safe when results arrive from a concurrent engine (base
+writes stay atomic via tmp + rename).  ``load_state()`` folds the log
+back into the base and understands both versions, so a v1 journal
+resumes transparently under the streaming engine and vice versa.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import threading
 from pathlib import Path
-from typing import Any, Mapping
+from typing import Any, Iterable, Iterator, Mapping
+
+
+def compress_ranges(indices: Iterable[int]) -> list[list[int]]:
+    """Fold an index set into sorted inclusive ``[start, end]`` spans."""
+    out: list[list[int]] = []
+    for i in sorted(set(indices)):
+        if out and i == out[-1][1] + 1:
+            out[-1][1] = i
+        else:
+            out.append([i, i])
+    return out
+
+
+def expand_ranges(ranges: Iterable[Iterable[int]]) -> Iterator[int]:
+    """Inverse of ``compress_ranges``: yield every covered index."""
+    for start, end in ranges:
+        yield from range(int(start), int(end) + 1)
+
+
+@dataclasses.dataclass
+class JournalState:
+    """Everything a resume needs, folded from base document + log."""
+
+    version: int
+    completed: set[str]                 # completed node ids (both versions)
+    meta: dict[str, Any]
+    hosts: dict[str, str]
+    instances: list[dict[str, Any]] | None = None   # v1 base only
+    completed_indices: dict[str, set[int]] | None = None  # v2: task → indices
+    space_hash: str | None = None       # v2 only
+    n_instances: int | None = None      # v2 only
 
 
 class StudyJournal:
@@ -41,21 +85,8 @@ class StudyJournal:
         self.__dict__.update(state)
         self._lock = threading.Lock()
 
-    # -- base document ---------------------------------------------------
-    def _write_base(
-        self,
-        instances: list[dict[str, Any]],
-        completed: set[str],
-        meta: Mapping[str, Any] | None,
-        hosts: Mapping[str, str] | None = None,
-    ) -> None:
-        doc = {
-            "version": 1,
-            "instances": instances,
-            "completed": sorted(completed),
-            "meta": dict(meta or {}),
-            "hosts": dict(hosts or {}),
-        }
+    # -- base documents --------------------------------------------------
+    def _replace_base(self, doc: Mapping[str, Any]) -> None:
         tmp = self.path.with_suffix(".tmp")
         self.path.parent.mkdir(parents=True, exist_ok=True)
         tmp.write_text(json.dumps(doc, default=str))
@@ -64,6 +95,21 @@ class StudyJournal:
         if self.log_path.exists():
             self.log_path.unlink()
 
+    def _write_base(
+        self,
+        instances: list[dict[str, Any]],
+        completed: set[str],
+        meta: Mapping[str, Any] | None,
+        hosts: Mapping[str, str] | None = None,
+    ) -> None:
+        self._replace_base({
+            "version": 1,
+            "instances": instances,
+            "completed": sorted(completed),
+            "meta": dict(meta or {}),
+            "hosts": dict(hosts or {}),
+        })
+
     def save(
         self,
         instances: list[dict[str, Any]],
@@ -71,18 +117,49 @@ class StudyJournal:
         meta: Mapping[str, Any] | None = None,
         hosts: Mapping[str, str] | None = None,
     ) -> None:
-        """Write (compact) the full study state atomically.  ``hosts``
-        maps task id → executing host (remote backends)."""
+        """Write (compact) the full eager study state atomically as a v1
+        document.  ``hosts`` maps task id → executing host."""
         with self._lock:
             self._write_base(instances, completed, meta, hosts)
 
-    def mark_complete(self, task_id: str, host: str | None = None) -> None:
+    def save_indexed(
+        self,
+        space_hash: str,
+        n_instances: int,
+        completed: Mapping[str, Iterable[int]],
+        meta: Mapping[str, Any] | None = None,
+        hosts: Mapping[str, str] | None = None,
+    ) -> None:
+        """Write (compact) a v2 document: the space hash plus per-task
+        completed instance indices, range-compressed — O(completed
+        ranges) bytes, independent of N_W."""
+        with self._lock:
+            self._replace_base({
+                "version": 2,
+                "space": space_hash,
+                "n_instances": int(n_instances),
+                "completed": {task: compress_ranges(ix)
+                              for task, ix in sorted(completed.items())},
+                "meta": dict(meta or {}),
+                "hosts": dict(hosts or {}),
+            })
+
+    # -- incremental appends ---------------------------------------------
+    def mark_complete(self, task_id: str, host: str | None = None,
+                      index: int | None = None,
+                      task: str | None = None) -> None:
         """Incrementally record one completion: an O(1) locked append to
         the sidecar log, never a rewrite of the base document.  ``host``
-        records where the task ran (remote provenance)."""
+        records where the task ran (remote provenance); ``index`` +
+        ``task`` record the instance's space index for journal v2 (range
+        compression happens at the next compaction)."""
         entry: dict[str, Any] = {"completed": task_id}
         if host:
             entry["host"] = host
+        if index is not None:
+            entry["index"] = int(index)
+        if task is not None:
+            entry["task"] = task
         with self._lock:
             if not self.path.exists():
                 self._write_base([], set(), {})
@@ -90,20 +167,66 @@ class StudyJournal:
                 f.write(json.dumps(entry) + "\n")
                 f.flush()
 
-    def load(self) -> tuple[list[dict[str, Any]], set[str], dict[str, Any]]:
+    # -- readers ----------------------------------------------------------
+    def _log_entries(self) -> Iterator[dict[str, Any]]:
+        if not self.log_path.exists():
+            return
+        with self.log_path.open() as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    yield json.loads(line)
+
+    def load_state(self) -> JournalState:
+        """Fold base document + sidecar log into a ``JournalState``,
+        accepting either journal version (v1 read-compat)."""
         with self._lock:
             doc = json.loads(self.path.read_text())
-            if doc.get("version") != 1:
+            version = doc.get("version")
+            if version not in (1, 2):
                 raise ValueError(
-                    f"unsupported journal version {doc.get('version')!r}")
-            completed = set(doc["completed"])
-            if self.log_path.exists():
-                with self.log_path.open() as f:
-                    for line in f:
-                        line = line.strip()
-                        if line:
-                            completed.add(json.loads(line)["completed"])
-            return doc["instances"], completed, doc.get("meta", {})
+                    f"unsupported journal version {version!r}")
+            hosts: dict[str, str] = dict(doc.get("hosts") or {})
+            if version == 1:
+                state = JournalState(
+                    version=1,
+                    completed=set(doc["completed"]),
+                    meta=doc.get("meta", {}),
+                    hosts=hosts,
+                    instances=doc["instances"],
+                )
+            else:
+                state = JournalState(
+                    version=2,
+                    completed=set(),
+                    meta=doc.get("meta", {}),
+                    hosts=hosts,
+                    completed_indices={
+                        task: set(expand_ranges(ranges))
+                        for task, ranges in (doc.get("completed") or {}).items()},
+                    space_hash=doc.get("space"),
+                    n_instances=doc.get("n_instances"),
+                )
+            for entry in self._log_entries():
+                state.completed.add(entry["completed"])
+                if entry.get("host"):
+                    state.hosts[entry["completed"]] = entry["host"]
+                if (state.completed_indices is not None
+                        and entry.get("task") is not None
+                        and entry.get("index") is not None):
+                    state.completed_indices.setdefault(
+                        entry["task"], set()).add(int(entry["index"]))
+            return state
+
+    def load(self) -> tuple[list[dict[str, Any]], set[str], dict[str, Any]]:
+        """Legacy v1 reader: ``(instances, completed ids, meta)``.  A v2
+        journal has no instance list — use ``load_state()`` (which also
+        reads v1) anywhere a streaming journal may appear."""
+        state = self.load_state()
+        if state.version != 1:
+            raise ValueError(
+                "journal is v2 (indexed); use load_state() to read it")
+        return state.instances or [], state.completed, state.meta
 
     def hosts(self) -> dict[str, str]:
         """Task id → executing host, folded from the base document and
@@ -113,12 +236,7 @@ class StudyJournal:
             if self.path.exists():
                 doc = json.loads(self.path.read_text())
                 hosts.update(doc.get("hosts") or {})
-            if self.log_path.exists():
-                with self.log_path.open() as f:
-                    for line in f:
-                        line = line.strip()
-                        if line:
-                            entry = json.loads(line)
-                            if entry.get("host"):
-                                hosts[entry["completed"]] = entry["host"]
+            for entry in self._log_entries():
+                if entry.get("host"):
+                    hosts[entry["completed"]] = entry["host"]
             return hosts

@@ -10,13 +10,28 @@ parameter space (parameters are task-namespaced as ``task/param``); a
 *workflow instance* is one combination applied across the whole task DAG,
 exactly the paper's "a workflow corresponds to an instance having a
 unique parameter combination".
+
+Two execution shapes share every backend, retry, and journal semantic:
+
+* **Eager** (``run()``) — materialize all instances, build the full
+  tasks × instances DAG up front, journal v1.  Right for small studies
+  and for gang policies that want the whole ready set visible.
+* **Streaming** (``run(window=N)``) — instances are *addressed, never
+  enumerated*: ``iter_instances()`` streams ``(space index, combo)``
+  pairs via the space's O(1) mixed-radix ``combo_at``, an
+  ``InstanceWindow`` stamps out each instance's task sub-DAG only when
+  the scheduler's bounded frontier has room, resolved nodes retire
+  immediately, and the journal is compact v2 (space hash + completed
+  instance indices, range-compressed).  Startup cost and live state are
+  O(slots + window) — independent of N_W — which is what makes
+  million-combination studies (§5.1 "large parameter spaces") tractable.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from pathlib import Path
-from typing import Any, Callable, Mapping, Sequence
+from typing import Any, Callable, Iterator, Mapping, Sequence
 
 from .interpolate import render_command, render_environ
 from .dag import TaskDAG, TaskNode
@@ -67,9 +82,16 @@ class ParameterStudy:
 
     # -- expansion --------------------------------------------------------
     def space(self) -> ParameterSpace:
+        """The global parameter space (task-namespaced product).
+
+        ``sampling`` applies to the *global* combination space, so at
+        most one distinct sampling block may appear across tasks —
+        conflicting blocks raise ``ValueError`` instead of silently
+        letting the first task win."""
         params: dict[str, list[Any]] = {}
         fixed: list[list[str]] = []
         sampling: dict[str, Any] | None = None
+        sampling_owner: str | None = None
         for tname, task in self.spec.tasks.items():
             tparams = task.parameters()
             tspace = from_task(tparams, task.fixed, task.sampling)
@@ -77,30 +99,63 @@ class ParameterStudy:
                 params[_ns(tname, pname)] = values
             for group in tspace.fixed:
                 fixed.append([_ns(tname, p) for p in group])
-            if task.sampling and sampling is None:
-                sampling = dict(task.sampling)
+            if task.sampling:
+                block = dict(task.sampling)
+                if sampling is None:
+                    sampling, sampling_owner = block, tname
+                elif block != sampling:
+                    raise ValueError(
+                        f"conflicting sampling blocks: task "
+                        f"{sampling_owner!r} declares {sampling!r} but "
+                        f"task {tname!r} declares {block!r} (sampling is "
+                        f"global to the study — declare it once, or "
+                        f"identically)")
         return ParameterSpace(params=params, fixed=fixed, sampling=sampling)
 
+    def instance_count(self) -> int:
+        """Post-sampling instance count, without enumerating the space."""
+        return self.space().sample_count()
+
+    def iter_instances(self) -> Iterator[tuple[int, dict[str, Any]]]:
+        """Stream ``(space index, combo)`` pairs in deterministic
+        sampling order — O(1) memory regardless of space size."""
+        space = self.space()
+        for i in space.iter_sample():
+            yield i, space.combo_at(i)
+
     def instances(self) -> list[dict[str, Any]]:
-        """All workflow instances (post-sampling), deterministic order."""
+        """All workflow instances (post-sampling), deterministic order —
+        materialized; prefer ``iter_instances`` for large spaces."""
         return self.space().sample()
 
     # -- DAG construction ---------------------------------------------------
+    def _instance_nodes(self, combo: Mapping[str, Any],
+                        index: int | None = None) -> list[TaskNode]:
+        """One instance's task sub-DAG (self-contained: deps stay inside
+        the instance).  ``index`` is the combo's space index, carried in
+        the payload for journal v2 / provenance."""
+        cid = combo_id(combo)
+        nodes: list[TaskNode] = []
+        for tname, task in self.spec.tasks.items():
+            payload: dict[str, Any] = {"global_combo": dict(combo),
+                                       "timeout": task.timeout,
+                                       "allow_nonzero": task.allow_nonzero}
+            if index is not None:
+                payload["index"] = index
+            nodes.append(TaskNode(
+                id=f"{tname}@{cid}", task=tname,
+                combo=_strip_ns(combo, tname),
+                deps=[f"{d}@{cid}" for d in task.after],
+                payload=payload))
+        return nodes
+
     def build_dag(self, instances: Sequence[Mapping[str, Any]] | None = None
                   ) -> TaskDAG:
         dag = TaskDAG()
         combos = list(instances) if instances is not None else self.instances()
         for combo in combos:
-            cid = combo_id(combo)
-            for tname, task in self.spec.tasks.items():
-                node_id = f"{tname}@{cid}"
-                deps = [f"{d}@{cid}" for d in task.after]
-                local = _strip_ns(combo, tname)
-                dag.add(TaskNode(
-                    id=node_id, task=tname, combo=local, deps=deps,
-                    payload={"global_combo": dict(combo),
-                             "timeout": task.timeout,
-                             "allow_nonzero": task.allow_nonzero}))
+            for node in self._instance_nodes(combo):
+                dag.add(node)
         dag.validate()
         return dag
 
@@ -137,15 +192,113 @@ class ParameterStudy:
         return run_subprocess(cmd, env=env, timeout=timeout)
 
     def _remote_spec_defaults(self) -> dict[str, Any]:
-        """Remote-execution keywords from the WDL: first task that sets
-        ``hosts`` / ``batch`` / ``nnodes`` / ``ppnode`` wins."""
+        """Remote-execution keywords from the WDL, merged across tasks.
+
+        A keyword a task leaves unset (``None`` / empty ``hosts``) defers
+        to whichever task declares it; two tasks declaring *different*
+        values for the same keyword is a spec error (the pool is built
+        once per study, so per-task divergence cannot be honored)."""
         out: dict[str, Any] = {"hosts": None, "batch": None,
                                "nnodes": None, "ppnode": None}
-        for task in self.spec.tasks.values():
-            out["hosts"] = out["hosts"] or (task.hosts or None)
-            out["batch"] = out["batch"] or task.batch
-            out["nnodes"] = out["nnodes"] or task.nnodes
-            out["ppnode"] = out["ppnode"] or task.ppnode
+        owner: dict[str, str] = {}
+        for tname, task in self.spec.tasks.items():
+            declared = {"hosts": task.hosts or None, "batch": task.batch,
+                        "nnodes": task.nnodes, "ppnode": task.ppnode}
+            for key, val in declared.items():
+                if val is None:
+                    continue
+                if out[key] is None:
+                    out[key], owner[key] = val, tname
+                elif out[key] != val:
+                    raise ValueError(
+                        f"conflicting remote keyword {key!r}: task "
+                        f"{owner[key]!r} declares {out[key]!r} but task "
+                        f"{tname!r} declares {val!r}")
+        return out
+
+    def _make_worker(
+        self,
+        pool: str | WorkerPool,
+        gang: GangExecutor | None,
+        slots: int,
+        hosts: Sequence[str] | None,
+        ppnode: int | None,
+        nnodes: int | None,
+        transport: Any,
+        submitter: Any,
+    ) -> tuple[WorkerPool, bool]:
+        """Resolve the execution backend (shared by the eager and
+        windowed paths).  Returns ``(worker, owned)`` — an owned worker
+        is shut down by the run that created it."""
+        if gang is not None:
+            return GangPool(gang), True
+        if isinstance(pool, WorkerPool):
+            return pool, False
+        if pool in ("ssh", "slurm", "pbs", "batch"):
+            d = self._remote_spec_defaults()
+            kind = pool if pool != "batch" else (d["batch"] or "slurm")
+            return make_pool(
+                kind, slots,
+                hosts=list(hosts) if hosts else d["hosts"],
+                ppnode=ppnode or d["ppnode"],
+                nnodes=nnodes or d["nnodes"],
+                render=self.render_node, transport=transport,
+                submitter=submitter,
+                spool_root=self.db.dir / "batch"), True
+        return make_pool(pool, slots), True
+
+    @staticmethod
+    def _ids_from_indices(space: ParameterSpace,
+                          completed_indices: Mapping[str, set[int]]
+                          ) -> set[str]:
+        """Reconstruct completed node ids from a v2 journal's per-task
+        instance indices (eager resume of a streaming journal)."""
+        cids: dict[int, str] = {}
+        ids: set[str] = set()
+        for tname, idxs in completed_indices.items():
+            for i in idxs:
+                cid = cids.get(i)
+                if cid is None:
+                    cid = cids[i] = combo_id(space.combo_at(i))
+                ids.add(f"{tname}@{cid}")
+        return ids
+
+    @staticmethod
+    def _indices_from_v1(space: ParameterSpace, instances: Sequence[Mapping[str, Any]],
+                         completed: set[str]) -> dict[str, set[int]]:
+        """Migrate a v1 journal's completed node ids to per-task space
+        indices (streaming resume of an eager journal).  Instances no
+        longer addressable in the current space are dropped — they would
+        not be admitted anyway.
+
+        A crash-state v1 journal (the eager run died between
+        ``mark_complete`` and compaction) has completions in the sidecar
+        log but an *empty* base instance list; completed ids their
+        instance list cannot explain are resolved by streaming the
+        sampled space until every cid is found — completions cluster at
+        the front of sampling order, so the scan usually stops early.
+        """
+        idx_by_cid: dict[str, int] = {}
+        for inst in instances:
+            try:
+                idx_by_cid[combo_id(inst)] = space.index_of(inst)
+            except (KeyError, ValueError):
+                continue
+        unmatched = ({nid.partition("@")[2] for nid in completed}
+                     - set(idx_by_cid))
+        if unmatched:
+            for i in space.iter_sample():
+                cid = combo_id(space.combo_at(i))
+                if cid in unmatched:
+                    idx_by_cid[cid] = i
+                    unmatched.discard(cid)
+                    if not unmatched:
+                        break
+        out: dict[str, set[int]] = {}
+        for nid in completed:
+            tname, _, cid = nid.partition("@")
+            if cid in idx_by_cid:
+                out.setdefault(tname, set()).add(idx_by_cid[cid])
         return out
 
     def run(
@@ -162,31 +315,55 @@ class ParameterStudy:
         nnodes: int | None = None,
         transport: Any = None,
         submitter: Any = None,
+        window: int | None = None,
     ) -> dict[str, TaskResult]:
         """Execute the study through the unified event engine.
 
         ``resume=True`` reloads the journal and skips completed nodes
-        (checkpoint/restart).  ``pool`` selects the execution backend:
-        ``"inline"`` (deterministic, serial), ``"thread"`` / ``"process"``
-        (real parallelism across ``slots`` workers), ``"ssh"`` /
-        ``"slurm"`` / ``"pbs"`` (remote dispatch of rendered commands —
-        slot count comes from ``hosts × ppnode`` / ``nnodes × ppnode``,
-        defaulting to the WDL ``hosts:``/``batch:``/``nnodes``/``ppnode``
-        keywords; ``transport`` / ``submitter`` inject the network seam,
-        e.g. the no-network ``LocalTransport``/``LocalSubmitter`` fakes),
-        or any ``WorkerPool`` instance.  ``gang`` switches to batched
-        dispatch — stackable ready groups launched as single programs,
-        the paper's single-cluster-job technique — implemented as a pool
-        policy on the same engine, so retries, failure closure, and
-        journaling apply there too.  ``speculate`` enables straggler
-        duplication (idempotent runners only).
+        (checkpoint/restart; either journal version resumes under either
+        path).  ``pool`` selects the execution backend: ``"inline"``
+        (deterministic, serial), ``"thread"`` / ``"process"`` (real
+        parallelism across ``slots`` workers), ``"ssh"`` / ``"slurm"`` /
+        ``"pbs"`` (remote dispatch of rendered commands — slot count
+        comes from ``hosts × ppnode`` / ``nnodes × ppnode``, defaulting
+        to the WDL ``hosts:``/``batch:``/``nnodes``/``ppnode`` keywords;
+        ``transport`` / ``submitter`` inject the network seam, e.g. the
+        no-network ``LocalTransport``/``LocalSubmitter`` fakes), or any
+        ``WorkerPool`` instance.  ``gang`` switches to batched dispatch —
+        stackable ready groups launched as single programs, the paper's
+        single-cluster-job technique — implemented as a pool policy on
+        the same engine, so retries, failure closure, and journaling
+        apply there too.  ``speculate`` enables straggler duplication
+        (idempotent runners only).
+
+        ``window=N`` switches to streaming admission: instances are
+        stamped out lazily from their space index, at most
+        ``slots + N`` task nodes stay live, and the journal is compact
+        v2 — startup and memory stay O(slots + window) however large the
+        space (``window=None`` keeps the eager whole-DAG path).
         """
+        if window is not None:
+            return self._run_windowed(
+                window=window, slots=slots, resume=resume, runner=runner,
+                gang=gang, max_retries=max_retries, pool=pool,
+                speculate=speculate, hosts=hosts, ppnode=ppnode,
+                nnodes=nnodes, transport=transport, submitter=submitter)
         instances = self.instances()
         completed: set[str] = set()
         if resume and self.journal.exists():
-            saved_instances, completed, _ = self.journal.load()
-            if saved_instances:
-                instances = saved_instances
+            state = self.journal.load_state()
+            completed = set(state.completed)
+            if state.version == 1 and state.instances:
+                instances = state.instances
+            elif state.version == 2 and state.completed_indices:
+                space = self.space()
+                if state.space_hash and state.space_hash != space.space_hash():
+                    raise ValueError(
+                        f"cannot resume: journal was written for space "
+                        f"{state.space_hash} but this study declares "
+                        f"{space.space_hash()}")
+                completed |= self._ids_from_indices(
+                    space, state.completed_indices)
         dag = self.build_dag(instances)
         self.db.write_meta({
             "name": self.name,
@@ -213,24 +390,8 @@ class ParameterStudy:
                     host_map[res.id] = res.host
                 self.journal.mark_complete(res.id, host=res.host)
 
-        if gang is not None:
-            worker: WorkerPool = GangPool(gang)
-        elif isinstance(pool, WorkerPool):
-            worker = pool
-        else:
-            if pool in ("ssh", "slurm", "pbs", "batch"):
-                d = self._remote_spec_defaults()
-                kind = pool if pool != "batch" else (d["batch"] or "slurm")
-                worker = make_pool(
-                    kind, slots,
-                    hosts=list(hosts) if hosts else d["hosts"],
-                    ppnode=ppnode or d["ppnode"],
-                    nnodes=nnodes or d["nnodes"],
-                    render=self.render_node, transport=transport,
-                    submitter=submitter,
-                    spool_root=self.db.dir / "batch")
-            else:
-                worker = make_pool(pool, slots)
+        worker, owned = self._make_worker(pool, gang, slots, hosts, ppnode,
+                                          nnodes, transport, submitter)
         # remote pools derive their capacity from hosts/nnodes × ppnode;
         # the scheduler must drive every dispatch lane the pool offers
         # (for batch pools that is the allocation count, not the group
@@ -242,12 +403,161 @@ class ParameterStudy:
             results = sched.execute(dag, run_fn, completed=completed,
                                     on_result=_on_result, pool=worker)
         finally:
-            if not isinstance(pool, WorkerPool):
+            if owned:
                 worker.shutdown()
         # compact the journal: fold the append log back into the base
         self.journal.save(instances, completed, {"name": self.name},
                           hosts=host_map)
+        self.last_run_stats = {
+            "peak_live_nodes": sched.peak_live_nodes,
+            "n_instances": len(instances),
+        }
         return results
+
+    def _run_windowed(
+        self,
+        window: int,
+        slots: int,
+        resume: bool,
+        runner: Callable[[TaskNode], Any] | None,
+        gang: GangExecutor | None,
+        max_retries: int,
+        pool: str | WorkerPool,
+        speculate: bool,
+        hosts: Sequence[str] | None,
+        ppnode: int | None,
+        nnodes: int | None,
+        transport: Any,
+        submitter: Any,
+    ) -> dict[str, TaskResult]:
+        """Streaming execution: windowed admission + journal v2."""
+        space = self.space()
+        shash = space.space_hash()
+        n_instances = space.sample_count()
+        if space.size():
+            # every instance shares one task topology — validate it once
+            # on a template sub-DAG instead of per admission
+            template = TaskDAG()
+            for node in self._instance_nodes(space.combo_at(0)):
+                template.add(node)
+            template.validate()
+
+        completed_idx: dict[str, set[int]] = {}
+        host_map: dict[str, str] = {}
+        if resume and self.journal.exists():
+            state = self.journal.load_state()
+            if state.version == 2:
+                if state.space_hash and state.space_hash != shash:
+                    raise ValueError(
+                        f"cannot resume: journal was written for space "
+                        f"{state.space_hash} but this study declares "
+                        f"{shash}")
+                completed_idx = {t: set(ix) for t, ix
+                                 in (state.completed_indices or {}).items()}
+            else:
+                completed_idx = self._indices_from_v1(
+                    space, state.instances or [], state.completed)
+            host_map.update(state.hosts)
+
+        self.db.write_meta({
+            "name": self.name,
+            "n_instances": n_instances,
+            "n_tasks": len(self.spec.tasks),
+            "n_nodes": n_instances * len(self.spec.tasks),
+            "space": shash,
+            "window": window,
+            "started": time.time(),
+        })
+        self.journal.save_indexed(shash, n_instances, completed_idx,
+                                  {"name": self.name}, hosts=host_map)
+
+        source = InstanceWindow(self, space=space, completed=completed_idx)
+        dag = TaskDAG()
+        run_fn = runner or self._default_runner
+
+        def _on_result(res: TaskResult) -> None:
+            # fires before the scheduler retires the node, so the lookup
+            # below sees the live TaskNode
+            node = dag.nodes[res.id]
+            idx = node.payload.get("index")
+            self.db.record(res.id, res.status, res.runtime, combo=node.combo,
+                           error=res.error, attempts=res.attempts,
+                           slot=res.slot, host=res.host, index=idx)
+            if res.status == "ok":
+                if res.host:
+                    host_map[res.id] = res.host
+                if idx is not None:
+                    completed_idx.setdefault(node.task, set()).add(idx)
+                self.journal.mark_complete(res.id, host=res.host, index=idx,
+                                           task=node.task)
+
+        worker, owned = self._make_worker(pool, gang, slots, hosts, ppnode,
+                                          nnodes, transport, submitter)
+        slots = max(slots, getattr(worker, "dispatch_slots", slots) or slots)
+        sched = Scheduler(slots=slots, max_retries=max_retries,
+                          speculate=speculate)
+        try:
+            results = sched.execute(dag, run_fn, on_result=_on_result,
+                                    pool=worker, source=source, window=window)
+        finally:
+            if owned:
+                worker.shutdown()
+        # compact: fold the append log back into a fresh v2 base
+        self.journal.save_indexed(shash, n_instances, completed_idx,
+                                  {"name": self.name}, hosts=host_map)
+        self.last_run_stats = {
+            "peak_live_nodes": sched.peak_live_nodes,
+            "n_instances": n_instances,
+            "admitted_instances": source.admitted,
+            "skipped_complete": source.skipped,
+            "slots": slots,     # post-lift: the admission bound's slots
+            "window": window,
+        }
+        return results
+
+
+class InstanceWindow:
+    """Lazy instance source for streaming execution (``run(window=N)``).
+
+    Iterates the space's sampled *indices* and stamps out one instance's
+    self-contained task sub-DAG per ``next_subdag()`` call — nothing is
+    enumerated ahead of the scheduler's admission window.  ``completed``
+    (task name → completed space indices, e.g. from a v2 journal) makes
+    resume free: an instance whose every task is complete is skipped
+    without ever being admitted; a partially complete instance admits
+    with its done node ids declared, so only the remainder runs.
+    """
+
+    def __init__(
+        self,
+        study: ParameterStudy,
+        space: ParameterSpace | None = None,
+        completed: Mapping[str, set[int]] | None = None,
+    ) -> None:
+        self.study = study
+        self.space = space if space is not None else study.space()
+        # snapshot: completions recorded *during* the run must not make
+        # the source skip instances it still owes the scheduler
+        self._completed = {t: frozenset(ix)
+                           for t, ix in (completed or {}).items()}
+        self._indices = self.space.iter_sample()
+        self.admitted = 0           # instances handed to the scheduler
+        self.skipped = 0            # instances already fully complete
+
+    def next_subdag(self) -> tuple[list[TaskNode], set[str]] | None:
+        """The next not-fully-complete instance's ``(nodes, done node
+        ids)`` — or ``None`` when the sampled index stream is dry."""
+        tasks = self.study.spec.tasks
+        for i in self._indices:
+            done = {t for t, ix in self._completed.items() if i in ix}
+            if len(done) == len(tasks):
+                self.skipped += 1
+                continue
+            nodes = self.study._instance_nodes(self.space.combo_at(i),
+                                               index=i)
+            self.admitted += 1
+            return nodes, {n.id for n in nodes if n.task in done}
+        return None
 
 
 def load_study(

@@ -19,6 +19,11 @@ commands over ``hosts × ppnode`` slots; ``--pool slurm|pbs --nnodes N
 ``--submitter`` default to the no-network fakes (commands run locally,
 per-"host" accounting preserved) — pass ``--transport ssh`` /
 ``--submitter scheduler`` to reach real hosts / a real queue.
+
+``--window N`` streams the study instead of materializing it: instances
+are addressed by space index, at most ``slots + N`` task nodes stay
+live, and checkpoints use the compact v2 journal — constant startup time
+and bounded memory for arbitrarily large parameter spaces.
 """
 from __future__ import annotations
 
@@ -73,6 +78,11 @@ def main() -> None:
                          "'scheduler' = real sbatch/qsub")
     ap.add_argument("--speculate", action="store_true",
                     help="duplicate straggler tasks (idempotent tasks only)")
+    ap.add_argument("--window", type=int, default=None,
+                    help="streaming admission: keep at most slots+WINDOW "
+                         "task nodes live, address instances by index "
+                         "instead of materializing the space, and journal "
+                         "in compact v2 form (default: eager whole-DAG)")
     ap.add_argument("--root", default=".papas")
     args = ap.parse_args()
 
@@ -95,7 +105,8 @@ def main() -> None:
             members = [dict(n.combo) for n in nodes]
             return train_ensemble(members)
         gang = GangExecutor(stackable_key, gang_runner)
-        results = study.run(gang=gang, resume=args.resume)
+        results = study.run(gang=gang, resume=args.resume,
+                            window=args.window)
         print(f"[gang] {gang.stats.tasks} tasks in "
               f"{gang.stats.dispatches} dispatches "
               f"(batching ×{gang.stats.batching_factor:.0f})")
@@ -116,13 +127,20 @@ def main() -> None:
                                 pool=args.pool, speculate=args.speculate,
                                 hosts=hosts, ppnode=args.ppnode,
                                 nnodes=args.nnodes, transport=transport,
-                                submitter=submitter)
+                                submitter=submitter, window=args.window)
         except ValueError as e:
             ap.error(str(e))    # e.g. unknown --pool kind, missing hosts
 
     ok = sum(1 for r in results.values() if r.status == "ok")
     print(f"{ok}/{len(results)} instances complete; "
           f"provenance in {study.db.dir}")
+    stats = getattr(study, "last_run_stats", None)
+    if args.window is not None and stats:
+        print(f"[window] admitted {stats['admitted_instances']}"
+              f"/{stats['n_instances']} instances "
+              f"({stats['skipped_complete']} already complete), "
+              f"peak live nodes {stats['peak_live_nodes']} "
+              f"(bound {stats['slots']} slots + {stats['window']} window)")
     for rid, res in sorted(results.items()):
         val = res.value if res.value is not None else ""
         where = f" @{res.host}" if res.host else ""

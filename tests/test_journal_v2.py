@@ -1,0 +1,271 @@
+"""Journal v2 (compact, indexed) + v1 interop (paper §4.1 restart).
+
+v2 stores the space hash plus range-compressed completed instance
+indices — O(completed ranges), never O(N_W) — while v1 journals keep
+resuming transparently under the streaming engine and vice versa.  The
+crash window between ``mark_complete`` (sidecar append) and compaction
+(base rewrite) must never lose a completion.
+"""
+import json
+
+import pytest
+
+from repro.core import (
+    LocalTransport, ParameterStudy, StudyJournal, compress_ranges,
+    expand_ranges, parse_yaml,
+)
+
+SPEC = """
+work:
+  args:
+    x: [1, 2, 3]
+    y: [10, 20]
+  command: echo ${args:x} ${args:y}
+"""
+
+
+def make_study(tmp_path, registry=None, name="s"):
+    return ParameterStudy(parse_yaml(SPEC), registry=registry,
+                          root=tmp_path, name=name)
+
+
+class TestRanges:
+    def test_compress_folds_contiguous_spans(self):
+        assert compress_ranges([0, 1, 2, 5, 7, 8]) == [[0, 2], [5, 5], [7, 8]]
+        assert compress_ranges([]) == []
+        assert compress_ranges([3, 3, 3]) == [[3, 3]]
+
+    def test_expand_is_inverse(self):
+        for indices in ([], [0], [0, 1, 2], [5, 9, 10, 11, 40]):
+            assert sorted(expand_ranges(compress_ranges(indices))) \
+                == sorted(set(indices))
+
+    def test_contiguous_completion_is_o1_bytes(self, tmp_path):
+        j = StudyJournal(tmp_path / "j.json")
+        j.save_indexed("hash", 100_000, {"work": range(100_000)}, {})
+        assert j.path.stat().st_size < 300   # one [start, end] span
+        state = j.load_state()
+        assert len(state.completed_indices["work"]) == 100_000
+
+
+class TestSaveLoadV2:
+    def test_roundtrip(self, tmp_path):
+        j = StudyJournal(tmp_path / "j.json")
+        j.save_indexed("abc123", 50, {"work": {0, 1, 2, 10}},
+                       {"name": "n"}, hosts={"work@x": "h0"})
+        state = j.load_state()
+        assert state.version == 2
+        assert state.space_hash == "abc123"
+        assert state.n_instances == 50
+        assert state.completed_indices == {"work": {0, 1, 2, 10}}
+        assert state.meta["name"] == "n"
+        assert state.hosts == {"work@x": "h0"}
+        assert state.instances is None
+
+    def test_legacy_load_rejects_v2(self, tmp_path):
+        j = StudyJournal(tmp_path / "j.json")
+        j.save_indexed("abc", 5, {}, {})
+        with pytest.raises(ValueError, match="v2"):
+            j.load()
+
+    def test_load_state_reads_v1(self, tmp_path):
+        j = StudyJournal(tmp_path / "j.json")
+        j.save([{"a": 1}], {"work@x"}, {"name": "n"})
+        state = j.load_state()
+        assert state.version == 1
+        assert state.instances == [{"a": 1}]
+        assert state.completed == {"work@x"}
+        assert state.completed_indices is None
+
+
+class TestCrashWindow:
+    def test_log_survives_missed_compaction(self, tmp_path):
+        """Completions appended after the last compaction (the crash
+        window between ``mark_complete`` and the final ``save_indexed``)
+        must fold back in on the next load."""
+        j = StudyJournal(tmp_path / "j.json")
+        j.save_indexed("h", 10, {"work": {0, 1}}, {})
+        j.mark_complete("work@aaa", index=2, task="work")
+        j.mark_complete("work@bbb", host="h7", index=3, task="work")
+        # a fresh object (≈ restarted process) folds base + sidecar log
+        state = StudyJournal(tmp_path / "j.json").load_state()
+        assert state.completed_indices["work"] == {0, 1, 2, 3}
+        assert state.completed == {"work@aaa", "work@bbb"}
+        assert state.hosts["work@bbb"] == "h7"
+
+    def test_study_crash_between_mark_and_compaction(self, tmp_path):
+        """Kill the engine mid-study with a non-Exception (so fault
+        isolation cannot swallow it) — completed indices must survive
+        into the resumed run, which only re-admits the remainder."""
+        class Crash(BaseException):
+            pass
+
+        def runner(combo):
+            if combo["args:x"] == 3:
+                raise Crash("power loss")
+            return 0
+
+        study = make_study(tmp_path, {"work": runner}, name="crash")
+        with pytest.raises(Crash):
+            study.run(window=2)
+        # the final compaction never ran: state lives in base + log
+        assert study.journal.log_path.exists()
+
+        resumed = make_study(tmp_path, {"work": lambda c: 0}, name="crash")
+        resumed.run(window=2, resume=True)
+        state = resumed.journal.load_state()
+        assert len(state.completed_indices["work"]) == 6
+        assert resumed.last_run_stats["skipped_complete"] >= 1
+        assert not resumed.journal.log_path.exists()  # compacted
+
+
+class TestMigration:
+    def test_v1_journal_resumes_windowed(self, tmp_path):
+        """Eager (v1) study interrupted, resumed through the streaming
+        path: completed node ids migrate to space indices."""
+        boom = {"armed": True}
+
+        def worker(combo):
+            if boom["armed"] and combo["args:x"] == 3:
+                raise RuntimeError("node died")
+            return combo["args:x"]
+
+        study = make_study(tmp_path, {"work": worker}, name="mig")
+        study.run(max_retries=0)       # eager: writes v1
+        assert json.loads(study.journal.path.read_text())["version"] == 1
+
+        boom["armed"] = False
+        resumed = make_study(tmp_path, {"work": worker}, name="mig")
+        ran = []
+        res = resumed.run(window=2, resume=True,
+                          runner=lambda n: ran.append(n.id) or 0)
+        assert len(ran) == 2           # only the two failed x==3 instances
+        assert all(r.status == "ok" for r in res.values())
+        # and the journal is now compact v2 with every instance folded
+        doc = json.loads(resumed.journal.path.read_text())
+        assert doc["version"] == 2
+        assert doc["completed"]["work"] == [[0, 5]]
+
+    def test_provenance_indices_mirror_journal(self, tmp_path):
+        """``StudyDB.completed_indices()`` (recovery from raw provenance
+        records) must agree with the journal's completed indices — the
+        two derivations of task → space indices may not drift."""
+        study = make_study(tmp_path, {"work": lambda c: 0}, name="prov")
+        study.run(window=2)
+        assert study.db.completed_indices() \
+            == study.journal.load_state().completed_indices
+
+    def test_crash_state_v1_journal_resumes_windowed(self, tmp_path):
+        """A v1 journal whose base was only ever written by
+        ``mark_complete`` (empty instance list, completions solely in
+        the sidecar log — e.g. a lost base write, or standalone journal
+        use) must still resume windowed: completed cids resolve by
+        streaming the space instead of the missing instance list."""
+        from repro.core import combo_id
+
+        study = make_study(tmp_path, {"work": lambda c: 0}, name="v1crash")
+        space = study.space()
+        # completions recorded against a journal with no saved base
+        for i in (0, 1, 2, 3):
+            cid = combo_id(space.combo_at(i))
+            study.journal.mark_complete(f"work@{cid}")
+        doc = json.loads(study.journal.path.read_text())
+        assert doc["version"] == 1 and doc["instances"] == []
+        assert study.journal.log_path.exists()
+
+        resumed = make_study(tmp_path, {"work": lambda c: 0}, name="v1crash")
+        ran = []
+        resumed.run(window=2, resume=True,
+                    runner=lambda n: ran.append(n.id) or 0)
+        assert len(ran) == 2           # only the two unrecorded instances
+        assert resumed.last_run_stats["skipped_complete"] == 4
+
+    def test_v2_journal_resumes_eager(self, tmp_path):
+        """Streaming (v2) study resumed through the eager path:
+        completed indices reconstruct node ids via combo_at."""
+        study = make_study(tmp_path, {"work": lambda c: 0}, name="back")
+        study.run(window=2)
+        resumed = make_study(tmp_path, {"work": lambda c: 0}, name="back")
+        ran = []
+        res = resumed.run(resume=True,
+                          runner=lambda n: ran.append(n.id) or 0)
+        assert ran == []               # everything already complete
+        assert len(res) == 6
+        assert all(r.attempts == 0 for r in res.values())
+
+    def test_space_hash_mismatch_refuses_resume(self, tmp_path):
+        study = make_study(tmp_path, {"work": lambda c: 0}, name="drift")
+        study.run(window=2)
+        changed = ParameterStudy(parse_yaml("""
+work:
+  args:
+    x: [1, 2, 3, 4]
+    y: [10, 20]
+  command: echo ${args:x} ${args:y}
+"""), registry={"work": lambda c: 0}, root=tmp_path, name="drift")
+        with pytest.raises(ValueError, match="journal was written for space"):
+            changed.run(window=2, resume=True)
+        # the eager path honors the same guarantee (a stale v2 journal
+        # must not silently mark the wrong study's instances complete)
+        with pytest.raises(ValueError, match="journal was written for space"):
+            changed.run(resume=True)
+
+
+class TestResumeAcrossPools:
+    SH_SPEC = """
+sh:
+  args:
+    n: [1, 2, 3, 4, 5, 6]
+  command: echo v-${args:n}
+"""
+
+    def _interrupt_midway(self, tmp_path, name, window):
+        class Crash(BaseException):
+            pass
+
+        seen = []
+
+        def runner(node):
+            if len(seen) >= 3:
+                raise Crash("mid-study interrupt")
+            seen.append(node.id)
+            return 0
+
+        study = ParameterStudy(parse_yaml(self.SH_SPEC), root=tmp_path,
+                               name=name)
+        with pytest.raises(Crash):
+            study.run(window=window, runner=runner)
+        return study
+
+    def test_inline_crash_resumes_on_ssh_pool(self, tmp_path):
+        """Indices journaled by an inline windowed run survive a crash
+        and resume on a completely different backend (ssh over the
+        no-network LocalTransport fake)."""
+        self._interrupt_midway(tmp_path, "xpool", window=2)
+        resumed = ParameterStudy(parse_yaml(self.SH_SPEC), root=tmp_path,
+                                 name="xpool")
+        state = resumed.journal.load_state()
+        done_before = set(state.completed_indices["sh"])
+        assert len(done_before) == 3
+
+        res = resumed.run(window=2, resume=True, pool="ssh",
+                          hosts=["h0", "h1"], ppnode=1,
+                          transport=LocalTransport())
+        assert all(r.status == "ok" for r in res.values())
+        assert resumed.last_run_stats["skipped_complete"] == 3
+        final = resumed.journal.load_state()
+        assert len(final.completed_indices["sh"]) == 6
+        assert done_before <= final.completed_indices["sh"]
+
+    def test_ssh_run_resumes_inline(self, tmp_path):
+        study = ParameterStudy(parse_yaml(self.SH_SPEC), root=tmp_path,
+                               name="xpool2")
+        res = study.run(window=3, pool="ssh", hosts=["h0"], ppnode=2,
+                        transport=LocalTransport())
+        assert all(r.status == "ok" for r in res.values())
+        # now resume inline: nothing left, hosts preserved from the run
+        resumed = ParameterStudy(parse_yaml(self.SH_SPEC), root=tmp_path,
+                                 name="xpool2")
+        resumed.run(window=3, resume=True)
+        assert resumed.last_run_stats["skipped_complete"] == 6
+        assert len(resumed.journal.hosts()) == 6

@@ -1,0 +1,211 @@
+"""Indexed parameter addressing (streaming pipeline, paper §5.1).
+
+``combo_at``/``index_of`` give every combination an O(1) mixed-radix
+address; ``iter_sample`` streams the post-``sampling`` subset as indices
+— the basis for studies over spaces too large to materialize.  Also
+covers the study-level spec hardening that rides along: conflicting
+``sampling`` blocks and conflicting per-task remote keywords now raise
+instead of silently picking a winner.
+"""
+import itertools
+
+import pytest
+
+from repro.core import ParameterSpace, ParameterStudy, parse_yaml
+
+
+def spaces_under_test():
+    return [
+        ParameterSpace(params={"a": [1, 2, 3]}),
+        ParameterSpace(params={"a": [1, 2], "b": ["x", "y", "z"]}),
+        ParameterSpace(params={"a": [1, 2, 3], "b": [10, 20, 30],
+                               "c": [0, 1], "d": ["p", "q"]},
+                       fixed=[["a", "b"]]),
+        ParameterSpace(params={"a": [1, 2], "b": [3, 4], "c": [5, 6],
+                               "d": [7, 8], "e": [0]},
+                       fixed=[["a", "b"], ["c", "d"]]),
+    ]
+
+
+class TestComboAt:
+    @pytest.mark.parametrize("space", spaces_under_test())
+    def test_matches_enumeration_order(self, space):
+        combos = list(space.combinations())
+        assert [space.combo_at(i) for i in range(space.size())] == combos
+
+    @pytest.mark.parametrize("space", spaces_under_test())
+    def test_index_of_is_inverse(self, space):
+        for i, combo in enumerate(space.combinations()):
+            assert space.index_of(combo) == i
+
+    def test_out_of_range(self):
+        space = ParameterSpace(params={"a": [1, 2]})
+        with pytest.raises(IndexError):
+            space.combo_at(2)
+        with pytest.raises(IndexError):
+            space.combo_at(-1)
+
+    def test_foreign_combo_rejected(self):
+        space = ParameterSpace(params={"a": [1, 2]})
+        with pytest.raises(ValueError):
+            space.index_of({"a": 99})
+
+    def test_no_enumeration_needed_for_huge_space(self):
+        # 10^12 combinations: any materialization would hang the test
+        space = ParameterSpace(
+            params={c: list(range(100)) for c in "abcdef"})
+        assert space.size() == 10**12
+        combo = space.combo_at(987_654_321_012)
+        assert space.index_of(combo) == 987_654_321_012
+
+
+class TestIterSample:
+    def test_no_sampling_streams_all_indices(self):
+        space = ParameterSpace(params={"a": [1, 2], "b": [3, 4]})
+        assert list(space.iter_sample()) == [0, 1, 2, 3]
+
+    def test_uniform_matches_sample(self):
+        space = ParameterSpace(params={"a": list(range(10))},
+                               sampling={"method": "uniform", "count": 4})
+        assert space.sample() == [space.combo_at(i)
+                                  for i in space.iter_sample()]
+        assert space.sample_count() == 4 == len(space.sample())
+
+    def test_random_deterministic_without_replacement(self):
+        space = ParameterSpace(
+            params={"a": list(range(50))},
+            sampling={"method": "random", "count": 7, "seed": 3})
+        first = list(space.iter_sample())
+        assert first == list(space.iter_sample())
+        assert len(set(first)) == 7 == space.sample_count()
+
+    def test_fraction(self):
+        space = ParameterSpace(params={"a": list(range(10))},
+                               sampling={"method": "uniform",
+                                         "fraction": 0.3})
+        assert space.sample_count() == 3
+        assert len(list(space.iter_sample())) == 3
+
+    def test_streaming_is_lazy(self):
+        space = ParameterSpace(params={c: list(range(100))
+                                       for c in "abcdef"})
+        # grabbing a prefix of a 10^12-index stream must be instant
+        head = list(itertools.islice(space.iter_sample(), 5))
+        assert head == [0, 1, 2, 3, 4]
+
+    def test_unknown_method_rejected_at_construction(self):
+        # must fail before a windowed run touches journal/provenance
+        with pytest.raises(ValueError, match="unknown sampling method"):
+            ParameterSpace(params={"a": [1, 2]},
+                           sampling={"method": "sobol", "count": 1})
+
+    def test_space_hash_tracks_declaration(self):
+        s1 = ParameterSpace(params={"a": [1, 2]})
+        s2 = ParameterSpace(params={"a": [1, 2]})
+        s3 = ParameterSpace(params={"a": [1, 2, 3]})
+        assert s1.space_hash() == s2.space_hash() != s3.space_hash()
+
+
+class TestIterInstances:
+    def test_streams_what_instances_materializes(self, tmp_path):
+        spec = parse_yaml("""
+work:
+  args:
+    x: ["1:5"]
+    y: [10, 20]
+  sampling:
+    method: uniform
+    count: 6
+  command: echo ${args:x} ${args:y}
+""")
+        study = ParameterStudy(spec, root=tmp_path, name="iter")
+        pairs = list(study.iter_instances())
+        assert [combo for _, combo in pairs] == study.instances()
+        space = study.space()
+        assert all(space.combo_at(i) == combo for i, combo in pairs)
+        assert len(pairs) == study.instance_count() == 6
+
+
+class TestStudySamplingValidation:
+    def test_conflicting_sampling_blocks_rejected(self, tmp_path):
+        spec = parse_yaml("""
+first:
+  args:
+    x: [1, 2, 3, 4]
+  sampling:
+    method: uniform
+    count: 2
+  command: echo a
+second:
+  args:
+    y: [1, 2]
+  sampling:
+    method: random
+    count: 3
+  command: echo b
+""")
+        study = ParameterStudy(spec, root=tmp_path, name="conflict")
+        with pytest.raises(ValueError, match="conflicting sampling"):
+            study.space()
+
+    def test_identical_sampling_blocks_accepted(self, tmp_path):
+        spec = parse_yaml("""
+first:
+  args:
+    x: [1, 2, 3, 4]
+  sampling:
+    method: uniform
+    count: 2
+  command: echo a
+second:
+  args:
+    y: [1, 2]
+  sampling:
+    method: uniform
+    count: 2
+  command: echo b
+""")
+        study = ParameterStudy(spec, root=tmp_path, name="same")
+        assert study.space().sampling == {"method": "uniform", "count": 2}
+        assert study.instance_count() == 2
+
+
+class TestRemoteSpecDefaults:
+    def test_later_task_fills_unset_keywords(self, tmp_path):
+        spec = parse_yaml("""
+first:
+  command: echo a
+second:
+  hosts: [h0, h1]
+  ppnode: 2
+  command: echo b
+""")
+        study = ParameterStudy(spec, root=tmp_path, name="merge")
+        d = study._remote_spec_defaults()
+        assert d["hosts"] == ["h0", "h1"]
+        assert d["ppnode"] == 2
+
+    def test_conflicting_keywords_rejected(self, tmp_path):
+        spec = parse_yaml("""
+first:
+  ppnode: 2
+  command: echo a
+second:
+  ppnode: 4
+  command: echo b
+""")
+        study = ParameterStudy(spec, root=tmp_path, name="clash")
+        with pytest.raises(ValueError, match="conflicting remote keyword"):
+            study._remote_spec_defaults()
+
+    def test_agreeing_keywords_accepted(self, tmp_path):
+        spec = parse_yaml("""
+first:
+  ppnode: 2
+  command: echo a
+second:
+  ppnode: 2
+  command: echo b
+""")
+        study = ParameterStudy(spec, root=tmp_path, name="agree")
+        assert study._remote_spec_defaults()["ppnode"] == 2

@@ -1,0 +1,225 @@
+"""Windowed (streaming) admission through the unified engine.
+
+``run(window=N)`` / ``Scheduler.execute(source=…, window=N)`` keep live
+graph state O(slots + window) while preserving every eager-path
+semantic: retries, failure closure, timeouts, resume, and backend
+pluggability.  The acceptance bound — peak live ``TaskNode`` count ≤
+``slots + window`` for a 10^5-combination study — is asserted here.
+"""
+import json
+
+import pytest
+
+from repro.core import (
+    InstanceWindow, LocalTransport, ParameterStudy, Scheduler, TaskDAG,
+    parse_yaml,
+)
+
+SMALL = """
+work:
+  args:
+    x: [1, 2, 3]
+    y: [10, 20]
+  command: echo ${args:x} ${args:y}
+"""
+
+CHAIN = """
+prep:
+  args:
+    x: [1, 2, 3, 4]
+  command: echo p
+train:
+  after: [prep]
+  command: echo t
+"""
+
+HUGE = """
+t:
+  args:
+    a: ["1:100"]
+    b: ["1:100"]
+    c: ["1:10"]
+  command: run ${args:a}
+"""
+
+
+class TestWindowedStudy:
+    def test_matches_eager_results(self, tmp_path):
+        runner = {"work": lambda c: c["args:x"] * c["args:y"]}
+        eager = ParameterStudy(parse_yaml(SMALL), registry=runner,
+                               root=tmp_path, name="eager")
+        windowed = ParameterStudy(parse_yaml(SMALL), registry=runner,
+                                  root=tmp_path, name="windowed")
+        res_e = eager.run()
+        res_w = windowed.run(window=2)
+        assert set(res_e) == set(res_w)
+        assert {k: r.value for k, r in res_e.items()} \
+            == {k: r.value for k, r in res_w.items()}
+        assert all(r.status == "ok" for r in res_w.values())
+
+    def test_failure_closure_within_instance(self, tmp_path):
+        def prep(c):
+            if c["args:x"] == 3:
+                raise RuntimeError("boom")
+            return 0
+
+        study = ParameterStudy(
+            parse_yaml(CHAIN),
+            registry={"prep": prep, "train": lambda c: 1},
+            root=tmp_path, name="closure")
+        res = study.run(window=2, max_retries=0)
+        by_status = {}
+        for r in res.values():
+            by_status.setdefault(r.status, []).append(r.id)
+        assert len(by_status["ok"]) == 6       # 3 instances × 2 tasks
+        assert len(by_status["failed"]) == 1   # the poisoned prep
+        assert len(by_status["skipped"]) == 1  # its dependent train
+
+    def test_retries_apply(self, tmp_path):
+        fails = {"n": 0}
+
+        def flaky(c):
+            if c["args:x"] == 2 and fails["n"] == 0:
+                fails["n"] += 1
+                raise RuntimeError("first attempt dies")
+            return 0
+
+        study = ParameterStudy(parse_yaml(SMALL), registry={"work": flaky},
+                               root=tmp_path, name="retry")
+        res = study.run(window=1, max_retries=1)
+        assert all(r.status == "ok" for r in res.values())
+        assert max(r.attempts for r in res.values()) == 2
+
+    def test_journal_is_v2_and_compact(self, tmp_path):
+        study = ParameterStudy(parse_yaml(SMALL),
+                               registry={"work": lambda c: 0},
+                               root=tmp_path, name="j2")
+        study.run(window=2)
+        doc = json.loads(study.journal.path.read_text())
+        assert doc["version"] == 2
+        assert "instances" not in doc
+        assert doc["n_instances"] == 6
+        assert doc["completed"]["work"] == [[0, 5]]  # one folded range
+
+    def test_resume_skips_without_admitting(self, tmp_path):
+        study = ParameterStudy(parse_yaml(SMALL),
+                               registry={"work": lambda c: 0},
+                               root=tmp_path, name="skip")
+        study.run(window=2)
+        again = ParameterStudy(parse_yaml(SMALL), root=tmp_path, name="skip")
+        ran = []
+        again.run(window=2, resume=True,
+                  runner=lambda n: ran.append(n.id) or 0)
+        assert ran == []
+        assert again.last_run_stats["admitted_instances"] == 0
+        assert again.last_run_stats["skipped_complete"] == 6
+
+    def test_window_smaller_than_slots_still_completes(self, tmp_path):
+        study = ParameterStudy(parse_yaml(SMALL),
+                               registry={"work": lambda c: 0},
+                               root=tmp_path, name="tiny")
+        res = study.run(window=1, slots=4, pool="thread")
+        assert len(res) == 6
+        assert all(r.status == "ok" for r in res.values())
+
+    def test_thread_pool_windowed(self, tmp_path):
+        study = ParameterStudy(parse_yaml(SMALL),
+                               registry={"work": lambda c: 0},
+                               root=tmp_path, name="thr")
+        res = study.run(window=3, slots=2, pool="thread")
+        assert all(r.status == "ok" for r in res.values())
+        assert study.last_run_stats["peak_live_nodes"] <= 2 + 3
+
+    def test_ssh_pool_windowed_records_hosts(self, tmp_path):
+        study = ParameterStudy(parse_yaml("""
+sh:
+  args:
+    n: [1, 2, 3, 4]
+  command: echo v-${args:n}
+"""), root=tmp_path, name="sshw")
+        res = study.run(window=2, pool="ssh", hosts=["h0", "h1"], ppnode=1,
+                        transport=LocalTransport())
+        assert all(r.status == "ok" for r in res.values())
+        assert len(study.journal.hosts()) == 4
+        assert set(study.journal.hosts().values()) <= {"h0", "h1"}
+
+
+class TestAdmissionBound:
+    def test_peak_live_nodes_at_1e5_combos(self, tmp_path):
+        """Acceptance: a 10^5-combination study completes with peak live
+        TaskNode count ≤ slots + window (raw engine: no journal I/O, so
+        the bound — not disk throughput — is what's under test)."""
+        study = ParameterStudy(parse_yaml(HUGE), root=tmp_path, name="huge")
+        assert study.instance_count() == 100_000
+        source = InstanceWindow(study)
+        sched = Scheduler(slots=4)
+        res = sched.execute(TaskDAG(), lambda n: 0,
+                            source=source, window=16)
+        assert len(res) == 100_000
+        assert all(r.status == "ok" for r in res.values())
+        assert sched.peak_live_nodes <= 4 + 16
+
+    def test_multi_task_instances_respect_bound(self, tmp_path):
+        study = ParameterStudy(
+            parse_yaml(CHAIN),
+            registry={"prep": lambda c: 0, "train": lambda c: 0},
+            root=tmp_path, name="bound2")
+        study.run(window=2, slots=2)
+        # strict even though each instance admits 2 nodes at once: a
+        # sub-DAG that would overflow the budget waits for retirements
+        assert study.last_run_stats["peak_live_nodes"] <= 2 + 2
+
+    def test_instance_larger_than_budget_still_runs(self, tmp_path):
+        # progress guarantee: window + slots smaller than one instance's
+        # sub-DAG admits the instance whole (the one allowed excursion)
+        study = ParameterStudy(
+            parse_yaml(CHAIN),
+            registry={"prep": lambda c: 0, "train": lambda c: 0},
+            root=tmp_path, name="over")
+        res = study.run(window=1, slots=1)
+        assert len(res) == 8
+        assert all(r.status == "ok" for r in res.values())
+        assert study.last_run_stats["peak_live_nodes"] == 2  # one instance
+
+    def test_source_and_window_must_pair(self):
+        sched = Scheduler(slots=1)
+        with pytest.raises(ValueError):
+            sched.execute(TaskDAG(), lambda n: 0, window=4)
+        with pytest.raises(ValueError):
+            sched.execute(TaskDAG(), lambda n: 0, source=object())
+
+    def test_window_must_be_positive(self, tmp_path):
+        study = ParameterStudy(parse_yaml(SMALL),
+                               registry={"work": lambda c: 0},
+                               root=tmp_path, name="w0")
+        with pytest.raises(ValueError):
+            study.run(window=0)
+
+    def test_eager_path_unchanged_by_default(self, tmp_path):
+        study = ParameterStudy(parse_yaml(SMALL),
+                               registry={"work": lambda c: 0},
+                               root=tmp_path, name="eag")
+        res = study.run()
+        assert all(r.status == "ok" for r in res.values())
+        doc = json.loads(study.journal.path.read_text())
+        assert doc["version"] == 1 and len(doc["instances"]) == 6
+
+
+class TestSampledStreaming:
+    def test_windowed_run_respects_sampling(self, tmp_path):
+        study = ParameterStudy(parse_yaml("""
+work:
+  args:
+    x: ["1:100"]
+  sampling:
+    method: random
+    count: 10
+    seed: 7
+  command: echo ${args:x}
+"""), registry={"work": lambda c: 0}, root=tmp_path, name="sampled")
+        res = study.run(window=4)
+        assert len(res) == 10
+        doc = json.loads(study.journal.path.read_text())
+        n_done = sum(e - s + 1 for r in doc["completed"].values()
+                     for s, e in r)
+        assert n_done == 10
