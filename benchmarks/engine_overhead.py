@@ -11,9 +11,18 @@ The streaming rows quantify the windowed pipeline: startup-to-first-
 dispatch for a 10^5-combination study, eager (materialize + build the
 whole DAG + v1 journal) vs windowed (index addressing + bounded
 admission + v2 journal), and the journal footprint of each format.
+
+The throughput rows quantify the short-task dispatch path: tasks/sec on
+10^4 no-op shell tasks through the full study pipeline (render →
+dispatch → journal → provenance), thread pool vs persistent worker
+lanes vs windowed lanes — compiled templates, gang-style lane batching,
+and group-commit recording are what separate the rows.  ``--throughput``
+runs only these rows and exits nonzero if the lane pool regresses below
+half the recorded baseline (the CI floor).
 """
 from __future__ import annotations
 
+import sys
 import tempfile
 import time
 from pathlib import Path
@@ -24,6 +33,11 @@ from repro.core import InlinePool, LocalTransport, ParameterStudy, Scheduler, \
 N_SLEEP = 32
 SLEEP_S = 0.05
 SLOTS = 8
+
+#: recorded lane-pool baseline on the reference box (tasks/sec at 10^4
+#: no-op tasks, 8 lanes, batch 8).  ``--throughput`` fails below half
+#: this — a regression gate, not a leaderboard.
+LANE_TASKS_PER_SEC_BASELINE = 1800.0
 
 WDL_SMALL = """
 t:
@@ -109,6 +123,83 @@ def _streaming_rows() -> list[tuple[str, float, dict]]:
                      {"v1": v1_bytes, "v2": v2_bytes,
                       "ratio": round(v1_bytes / v2_bytes)}))
     return rows
+
+
+#: 10^4 no-op combinations — the NetLogo/BehaviorSpace regime: tasks so
+#: short the framework, not the hardware, sets the completion rate.
+WDL_NOOP = """
+t:
+  args:
+    i: ["1:10000"]
+  command: "true"
+"""
+
+
+def _throughput_rows() -> list[tuple[str, float, dict]]:
+    """tasks/sec at 10^4 no-op shell tasks through the full pipeline
+    (compiled-template render → pool dispatch → group-commit journal +
+    provenance): thread pool vs persistent lanes vs windowed lanes."""
+    rows = []
+    tps: dict[str, float] = {}
+    with tempfile.TemporaryDirectory() as root:
+        cases = [
+            ("thread", dict(pool="thread", slots=SLOTS)),
+            ("lane", dict(pool="lane", slots=SLOTS)),
+            ("windowed_lane", dict(pool="lane", slots=SLOTS, window=256,
+                                   keep_results=False)),
+        ]
+        for label, kwargs in cases:
+            study = ParameterStudy(parse_yaml(WDL_NOOP), root=root,
+                                   name=f"tp_{label}")
+            n = study.instance_count()
+            done = [0]
+            t0 = time.perf_counter()
+            study.run(on_result=lambda r: done.__setitem__(0, done[0] + 1),
+                      **kwargs)
+            wall = time.perf_counter() - t0
+            assert done[0] == n, f"{label}: {done[0]}/{n} resolved"
+            tps[label] = n / wall
+            rows.append((f"engine_throughput_{label}", n / wall,
+                         {"tasks": n, "slots": SLOTS,
+                          "wall_s": round(wall, 2),
+                          "tasks_per_sec": round(n / wall)}))
+            if label == "lane":
+                # group-commit amortization: appends per actual flush —
+                # the 2-opens-2-flushes-per-task world is ~1.0 here
+                rows.append(("engine_group_commit_amortization", 0.0,
+                             {"journal_appends": study.journal.n_appends,
+                              "journal_flushes": study.journal.n_flushes,
+                              "db_appends": study.db.n_appends,
+                              "db_flushes": study.db.n_flushes,
+                              "appends_per_flush": round(
+                                  study.journal.n_appends
+                                  / max(1, study.journal.n_flushes))}))
+    rows.append(("engine_lane_speedup_vs_thread", 0.0,
+                 {"speedup": round(tps["lane"] / tps["thread"], 1),
+                  "meets_5x": tps["lane"] >= 5 * tps["thread"],
+                  "floor_tasks_per_sec": LANE_TASKS_PER_SEC_BASELINE / 2,
+                  "above_floor": tps["lane"]
+                  >= LANE_TASKS_PER_SEC_BASELINE / 2}))
+    return rows
+
+
+def check_throughput_floor() -> int:
+    """CI gate: run only the throughput rows; nonzero exit when the lane
+    pool falls below half the recorded baseline or loses its ≥5× margin
+    over the thread pool."""
+    rows = _throughput_rows()
+    ok = True
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+        if name == "engine_lane_speedup_vs_thread":
+            ok = derived["meets_5x"] and derived["above_floor"]
+    if not ok:
+        print("FAIL: lane-pool throughput regressed "
+              f"(floor {LANE_TASKS_PER_SEC_BASELINE / 2:.0f} tasks/s, "
+              "required ≥5x thread pool)", file=sys.stderr)
+        return 1
+    print("throughput floor OK")
+    return 0
 
 
 def _sleep_node(node) -> str:
@@ -226,9 +317,12 @@ def run() -> list[tuple[str, float, dict]]:
 
     rows.extend(_streaming_rows())
     rows.extend(_makespan_rows())
+    rows.extend(_throughput_rows())
     return rows
 
 
 if __name__ == "__main__":
+    if "--throughput" in sys.argv:
+        sys.exit(check_throughput_floor())
     for name, us, derived in run():
         print(f"{name},{us:.1f},{derived}")

@@ -20,6 +20,14 @@ runs a 16 000-combination study through the *streaming* pipeline:
 instances are addressed by space index (never materialized), at most
 ``slots + window`` task nodes stay live, and the journal is compact v2 —
 the smoke prints wall time, peak RSS, and the asserted live-node bound.
+
+    PYTHONPATH=src python examples/quickstart.py --pool lane
+
+runs the reduced shell study through *persistent worker lanes*: one
+long-lived ``sh`` per slot fed rendered commands over a pipe protocol —
+the short-task throughput path.  The smoke asserts per-attempt lane
+provenance in records.jsonl (and that transient lane labels stay OUT of
+the journal host map).
 """
 import argparse
 import resource
@@ -57,6 +65,30 @@ matmulOMP:
     size: ["16:*2:64"]
   command: echo ${args:size}N_${environ:OMP_NUM_THREADS}T
 """
+
+
+def run_lane(slots: int = 2) -> None:
+    """Lane-pool smoke: the reduced shell study through persistent
+    worker lanes, with lane-host provenance and batching asserted."""
+    study = ParameterStudy(parse_yaml(REMOTE_WDL),
+                           root="/tmp/papas_quickstart",
+                           name="quickstart_lane")
+    results = study.run(pool="lane", slots=slots)
+    ok = sum(1 for r in results.values() if r.status == "ok")
+    by_lane: dict = {}
+    for r in results.values():
+        by_lane[r.host] = by_lane.get(r.host, 0) + 1
+    print(f"[lane] completed {ok}/{len(results)} across lanes {by_lane}")
+    assert ok == len(results), "lane smoke: tasks failed"
+    # lane identity is per-attempt provenance: in records.jsonl, but
+    # NOT in the journal host map (which stays O(remote tasks))
+    rec_hosts = {r["task_id"]: r["host"] for r in study.db.records()}
+    assert len(rec_hosts) == len(results) and all(
+        h.startswith("lane") for h in rec_hosts.values()), \
+        "lane smoke: records missing per-attempt lane provenance"
+    assert study.journal.hosts() == {}, \
+        "lane smoke: transient lane labels leaked into the journal"
+    print(f"[lane] records carry lanes for {len(rec_hosts)} attempts")
 
 
 def run_remote(hosts: str, ppnode: int) -> None:
@@ -120,7 +152,8 @@ def run_windowed(window: int, slots: int = 4) -> None:
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--pool", default="inline", choices=("inline", "ssh"))
+    ap.add_argument("--pool", default="inline",
+                    choices=("inline", "ssh", "lane"))
     ap.add_argument("--hosts", default="localhost")
     ap.add_argument("--ppnode", type=int, default=2)
     ap.add_argument("--window", type=int, default=None,
@@ -132,6 +165,9 @@ def main():
         return
     if args.pool == "ssh":
         run_remote(args.hosts, args.ppnode)
+        return
+    if args.pool == "lane":
+        run_lane()
         return
 
     study = ParameterStudy(parse_yaml(WDL), registry={"matmulOMP": matmul},

@@ -20,6 +20,12 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
     tests/test_streaming_space.py tests/test_windowed_engine.py \
     tests/test_journal_v2.py
 
+# short-task throughput path: compiled templates, persistent worker
+# lanes, group-commit recording — pinned by name
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+    tests/test_compiled_templates.py tests/test_lane_pool.py \
+    tests/test_group_commit.py
+
 # end-to-end smoke: a study through the SSH worker pool (hosts × ppnode
 # slots, LocalTransport fake — commands run locally, no network), with
 # per-task hosts asserted in the journal by the example itself
@@ -31,3 +37,14 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py \
 # wall time and peak RSS for eyeballing regressions
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py \
     --window 64
+
+# lane-pool smoke: persistent shell worker lanes end to end, with
+# per-task lane hosts asserted in the journal by the example itself
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py \
+    --pool lane
+
+# short-task throughput floor: 10^4 no-op tasks through thread vs lane
+# vs windowed-lane; fails if the lane pool drops below half the recorded
+# baseline or loses its >=5x margin over the thread pool
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python \
+    benchmarks/engine_overhead.py --throughput

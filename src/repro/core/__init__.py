@@ -6,15 +6,28 @@ from .executors import (
     GangPool,
     GangStats,
     InlinePool,
+    LaneStats,
+    LaneWorkerPool,
     ProcessWorkerPool,
     ShellResult,
     ThreadWorkerPool,
     WorkerPool,
     make_pool,
+    merged_env,
     run_subprocess,
     stackable_key,
 )
-from .interpolate import InterpolationError, interpolate, render_command, substitute_content
+from .interpolate import (
+    CompiledEnviron,
+    CompiledTemplate,
+    InterpolationError,
+    compile_environ,
+    compile_template,
+    interpolate,
+    render_command,
+    render_environ,
+    substitute_content,
+)
 from .paramspace import ParameterSpace, combo_id, from_task
 from .provenance import StudyDB, config_hash
 from .remote import (
@@ -59,12 +72,15 @@ from .wdl import (
 __all__ = [
     "DAGError", "TaskDAG", "TaskNode",
     "CompletionEvent", "GangExecutor", "GangPool", "GangStats", "InlinePool",
-    "ProcessWorkerPool", "ShellResult", "ThreadWorkerPool", "WorkerPool",
-    "make_pool", "run_subprocess", "stackable_key",
+    "LaneStats", "LaneWorkerPool", "ProcessWorkerPool", "ShellResult",
+    "ThreadWorkerPool", "WorkerPool", "make_pool", "merged_env",
+    "run_subprocess", "stackable_key",
     "BatchWorkerPool", "LocalSubmitter", "LocalTransport",
     "SchedulerSubmitter", "SSHTransport", "SSHWorkerPool", "Transport",
     "TransportError", "parse_hosts", "render_batch_script",
-    "InterpolationError", "interpolate", "render_command", "substitute_content",
+    "CompiledEnviron", "CompiledTemplate", "InterpolationError",
+    "compile_environ", "compile_template", "interpolate", "render_command",
+    "render_environ", "substitute_content",
     "ParameterSpace", "combo_id", "from_task",
     "StudyDB", "config_hash",
     "ScheduleEvent", "Scheduler", "TaskResult", "VirtualClock", "VirtualPool",

@@ -15,22 +15,40 @@ them (``submit``), and reports completions (``next_event``) — the paper's
 * ``GangPool``     — batched dispatch: claims a whole stackability group
   from the ready queue and launches it as ONE program (the paper's
   single-cluster-job technique, §4.3).  Wraps a ``GangExecutor``.
+* ``LaneWorkerPool`` — the short-task throughput path: one long-lived
+  ``sh`` worker per slot, fed rendered commands over a pipe protocol.
+  Process spawn is amortized across thousands of tasks (a shell builtin
+  like ``true`` never forks at all), ``take`` claims gang-style chunks
+  so one pipe write carries a whole batch, and per-task environment
+  overlays ride the command line — no per-task ``os.environ`` copy.
+  Its ``run_gang`` method is a drop-in ``GangRunner``, so a
+  ``GangExecutor``/``GangPool`` can fuse its batches onto the lanes.
 
 ``run_subprocess`` runs black-box shell tasks and always returns a
 ``ShellResult`` — a nonzero exit is *data*, classified by the scheduler's
 retry/failure-closure logic (respecting the task's ``allow_nonzero``
-keyword), not an exception.
+keyword), not an exception.  ``merged_env`` accepts a pre-snapshotted
+base environment so a pool or run copies ``os.environ`` once, not once
+per task.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import os
 import queue
+import re
+import select
 import shlex
+import shutil
+import signal
 import subprocess
+import tempfile
+import threading
 import time
 from collections import deque
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+from pathlib import Path
 from typing import Any, Callable, Hashable, Mapping, Sequence, TYPE_CHECKING
 
 from .dag import TaskNode
@@ -51,10 +69,16 @@ class ShellResult:
         return self.returncode == 0
 
 
-def merged_env(env: Mapping[str, str] | None) -> dict[str, str]:
+def merged_env(env: Mapping[str, str] | None,
+               base: Mapping[str, str] | None = None) -> dict[str, str]:
     """The task environment: the ambient process env overlaid with the
-    instance's rendered variables (paper §5 ``environ``)."""
-    full_env = dict(os.environ)
+    instance's rendered variables (paper §5 ``environ``).
+
+    ``base`` is an optional pre-snapshotted ambient environment — pools
+    and runs capture ``dict(os.environ)`` once and pass it here, so the
+    per-task cost is one small dict copy instead of a full environ walk.
+    """
+    full_env = dict(base) if base is not None else dict(os.environ)
     if env:
         full_env.update({k: str(v) for k, v in env.items()})
     return full_env
@@ -66,6 +90,7 @@ def run_subprocess(
     timeout: float | None = None,
     cwd: str | None = None,
     shell: bool = False,
+    base_env: Mapping[str, str] | None = None,
 ) -> ShellResult:
     """Run one black-box task; measures runtime (the paper's task
     profiler: "the application is not mandated to have an internal
@@ -78,13 +103,15 @@ def run_subprocess(
     ``subprocess.TimeoutExpired``, which the scheduler records as a
     failed attempt.  ``shell=True`` runs the command through ``sh -c``
     (pipes/redirects honored) instead of splitting it into argv.
+    ``base_env`` is the run-level ambient environment snapshot forwarded
+    to ``merged_env`` (None: snapshot ``os.environ`` per call).
     """
     t0 = time.monotonic()
     proc = subprocess.run(
         ["sh", "-c", command] if shell else shlex.split(command),
         capture_output=True,
         text=True,
-        env=merged_env(env),
+        env=merged_env(env, base_env),
         timeout=timeout,
         cwd=cwd,
         check=False,
@@ -135,6 +162,14 @@ class WorkerPool:
     """Backend interface for the scheduler's event loop."""
 
     kind = "base"
+
+    #: whether ``CompletionEvent.host`` names a durable location worth
+    #: folding into the journal's per-task host map (remote pools: yes).
+    #: Pools whose hosts are transient local labels (worker lanes) keep
+    #: host provenance in the per-attempt records only — a 10^5-task
+    #: windowed run must not grow an O(N_W) journal host map out of
+    #: lane indices.
+    durable_hosts = True
 
     @property
     def dispatch_slots(self) -> int:
@@ -269,20 +304,435 @@ class ProcessWorkerPool(_FuturePool):
         return ProcessPoolExecutor(max_workers=slots)
 
 
+# ---------------------------------------------------------------------------
+# Persistent worker lanes (short-task throughput path)
+# ---------------------------------------------------------------------------
+
+#: renders one node to its shell form: ``node -> (command | None, env)``.
+LaneRenderFn = Callable[[TaskNode], "tuple[str | None, Mapping[str, Any]]"]
+
+_ENV_NAME_RE = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*$")
+
+
+def _sq(s: str) -> str:
+    """POSIX single-quote."""
+    return "'" + s.replace("'", "'\\''") + "'"
+
+
+class _LaneGone(Exception):
+    """The lane's worker shell died (cancelled, killed, or crashed)."""
+
+
+class _LaneTimeout(Exception):
+    """A lane command exceeded its per-node timeout."""
+
+
+@dataclasses.dataclass
+class LaneStats:
+    """Dispatch accounting for the lane pool (mirrors ``GangStats``)."""
+
+    tasks: int = 0
+    dispatches: int = 0     # one per pipe-fed batch
+    respawns: int = 0       # worker shells restarted (timeout/cancel/crash)
+
+    @property
+    def batching_factor(self) -> float:
+        return self.tasks / max(1, self.dispatches)
+
+
+class LaneWorkerPool(WorkerPool):
+    """Persistent worker lanes: one long-lived ``sh`` process per slot,
+    fed rendered shell commands over a pipe protocol.
+
+    Where ``ThreadWorkerPool`` + ``run_subprocess`` pays a fresh process
+    spawn, a full environment copy, and executor/future bookkeeping per
+    task, a lane pays them once per *worker*: each task is one stanza
+    down the worker's stdin (``VAR=… command eval '<cmd>'`` followed by
+    an rc sentinel), so a shell builtin runs with zero forks and a real
+    command forks from a tiny ``sh`` instead of the Python interpreter.
+    ``take`` reuses the gang batching policy — it claims a same-task
+    chunk of up to ``batch`` ready nodes — and the whole chunk goes down
+    the pipe in ONE write, so the shell executes commands back-to-back
+    while the lane thread drains results behind it.
+
+    Task stdout flows back inline over the pipe, framed by a per-pool
+    random sentinel; stderr spools to a per-batch-index file and is read
+    back only when the command exits nonzero (``ShellResult.stderr`` is
+    empty for successful lane tasks — the one semantic difference from
+    ``run_subprocess``, traded for ~2 fewer file round-trips per task).
+
+    ``render`` maps a node to ``(command, env)`` — usually
+    ``ParameterStudy.render_node``.  Without a render fn the node's
+    payload ``command`` key is used; a node with neither fails its
+    attempt (in-process registry callables cannot be piped to a shell).
+    Per-task env vars are scoped to the single command (``VAR=v command
+    eval …`` does not persist in the lane), layered over the environment
+    snapshot taken once when the lane spawns.
+
+    ``cancel`` kills the lane hosting the abandoned dispatch (releasing
+    a stuck command) and the lane respawns for the next batch, so
+    scheduler-driven timeouts compose.  ``run_gang`` runs one fused node
+    batch across all lanes synchronously — signature-compatible with
+    ``GangRunner``, so ``GangExecutor(stackable_key, lanes.run_gang)``
+    dispatches gang groups through the persistent workers.
+    """
+
+    kind = "lane"
+    durable_hosts = False   # lane ids are transient labels, not hosts
+
+    def __init__(
+        self,
+        slots: int,
+        render: LaneRenderFn | None = None,
+        batch: int = 8,
+        cwd: str | None = None,
+    ) -> None:
+        if slots < 1:
+            raise ValueError("slots must be >= 1")
+        if batch < 1:
+            raise ValueError("batch must be >= 1")
+        self.slots = slots
+        self.render = render
+        self.batch = batch
+        self.cwd = cwd
+        self.stats = LaneStats()
+        self._base_env = dict(os.environ)   # snapshot once per pool
+        # per-pool random rc sentinel: task stdout flows back inline over
+        # the lane pipe, framed by a marker real output cannot guess
+        self._sent = f"__papas_{os.urandom(8).hex()}_rc="
+        self._marker = b"\n" + self._sent.encode()
+        self._spool = Path(tempfile.mkdtemp(prefix="papas-lanes-"))
+        self._work: "queue.Queue[tuple[int, list[TaskNode]] | None]" = (
+            queue.Queue())
+        self._events: "queue.Queue[CompletionEvent]" = queue.Queue()
+        self._lock = threading.Lock()
+        self._cancelled: set[int] = set()
+        self._active: dict[int, subprocess.Popen] = {}  # token → lane shell
+        self._gang_tokens = itertools.count(-1, -1)     # never collide with
+        self._gang_out: dict[int, tuple[list, list]] = {}  # scheduler tokens
+        self._gang_cv = threading.Condition(self._lock)
+        self._shutdown = False
+        self._threads = [
+            threading.Thread(target=self._worker, args=(i,),
+                             name=f"papas-lane-{i}", daemon=True)
+            for i in range(slots)
+        ]
+        for t in self._threads:
+            t.start()
+
+    # -- scheduler interface -------------------------------------------
+    def take(self, ready: list[str], dag: "TaskDAG") -> list[str]:
+        """Gang-style chunk claim: the longest same-task prefix of the
+        ready queue, capped at ``batch`` — one pipe write per chunk.
+        The cap adapts to queue depth (``len(ready) / slots``) so a
+        shallow queue spreads across every lane instead of serializing
+        full chunks on a few; deep sweeps still get full batches."""
+        k = min(self.batch, len(ready), max(1, len(ready) // self.slots))
+        if k > 1:
+            task0 = dag.nodes[ready[0]].task
+            j = 1
+            while j < k and dag.nodes[ready[j]].task == task0:
+                j += 1
+            k = j
+        out = ready[:k]
+        del ready[:k]
+        return out
+
+    def submit(self, token: int, runner: Runner | None,
+               nodes: Sequence[TaskNode]) -> None:
+        self._work.put((token, list(nodes)))
+
+    def next_event(self, timeout: float | None = None) -> CompletionEvent | None:
+        try:
+            return self._events.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def cancel(self, token: int) -> None:
+        """Kill the lane hosting an abandoned dispatch so a stuck command
+        releases its slot promptly; the lane respawns for the next
+        batch."""
+        with self._lock:
+            self._cancelled.add(token)
+            proc = self._active.get(token)
+        if proc is not None:
+            self._kill(proc)
+
+    def shutdown(self) -> None:
+        self._shutdown = True
+        for _ in self._threads:
+            self._work.put(None)
+        with self._lock:
+            procs = list(self._active.values())
+            self._gang_cv.notify_all()
+        for p in procs:
+            self._kill(p)
+        for t in self._threads:
+            t.join(timeout=2.0)
+        shutil.rmtree(self._spool, ignore_errors=True)
+
+    # -- gang integration ----------------------------------------------
+    def run_gang(self, nodes: Sequence[TaskNode]) -> list[Any]:
+        """Run one fused batch across every lane and return per-node
+        values in order — a ``GangRunner``, so gang studies dispatch
+        their groups through the persistent workers.  A lane-level
+        failure raises (gang semantics: the whole group's attempt
+        fails); per-command nonzero exits stay data in the returned
+        ``ShellResult``\\ s."""
+        nodes = list(nodes)
+        if not nodes:
+            return []
+        per = -(-len(nodes) // self.slots)      # ceil
+        chunks = [nodes[i:i + per] for i in range(0, len(nodes), per)]
+        toks: list[int] = []
+        with self._lock:
+            for _ in chunks:
+                toks.append(next(self._gang_tokens))
+        for tok, chunk in zip(toks, chunks):
+            self._work.put((tok, chunk))
+        with self._gang_cv:
+            while any(t not in self._gang_out for t in toks):
+                if self._shutdown:
+                    raise RuntimeError("lane pool shut down mid-gang")
+                self._gang_cv.wait(timeout=0.5)
+            outs = [self._gang_out.pop(t) for t in toks]
+        values: list[Any] = []
+        for chunk, (vals, errs) in zip(chunks, outs):
+            bad = [e for e in errs if e is not None]
+            if bad:
+                raise RuntimeError(
+                    f"lane gang batch failed: {bad[0]}"
+                    + (f" (+{len(bad) - 1} more)" if len(bad) > 1 else ""))
+            values.extend(vals)
+        return values
+
+    # -- worker machinery ----------------------------------------------
+    def _spawn(self, idx: int) -> subprocess.Popen:
+        return subprocess.Popen(
+            ["sh"], stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+            stderr=subprocess.DEVNULL, cwd=self.cwd, env=self._base_env,
+            start_new_session=True)
+
+    @staticmethod
+    def _kill(proc: subprocess.Popen) -> None:
+        try:
+            os.killpg(proc.pid, signal.SIGKILL)
+        except (ProcessLookupError, PermissionError):
+            pass
+
+    def _node_command(self, node: TaskNode
+                      ) -> tuple[str | None, Mapping[str, Any]]:
+        if self.render is not None:
+            return self.render(node)
+        payload = node.payload if isinstance(node.payload, Mapping) else {}
+        return payload.get("command"), payload.get("env") or {}
+
+    def _read_result(self, proc: subprocess.Popen, buf: bytearray,
+                     timeout: float | None) -> tuple[int, bytes]:
+        """Read lane stdout until the rc sentinel: returns ``(rc, task
+        stdout bytes)``.  The sentinel printf always starts at a line
+        boundary (it emits a leading newline of its own), so stdout is
+        everything before the marker.  EOF means the lane died
+        (cancelled or crashed)."""
+        fd = proc.stdout.fileno()
+        marker = self._marker
+        deadline = (time.monotonic() + timeout) if timeout else None
+        while True:
+            pos = buf.find(marker)
+            if pos >= 0:
+                end = buf.find(b"\n", pos + len(marker))
+                if end >= 0:
+                    rc = int(buf[pos + len(marker):end])
+                    out = bytes(buf[:pos])
+                    del buf[:end + 1]
+                    return rc, out
+            if deadline is not None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise _LaneTimeout
+                rlist, _, _ = select.select([fd], [], [], remaining)
+                if not rlist:
+                    continue
+            else:
+                select.select([fd], [], [])
+            chunk = os.read(fd, 65536)
+            if not chunk:
+                raise _LaneGone("lane worker exited")
+            buf += chunk
+
+    @staticmethod
+    def _slurp(path: Path) -> str:
+        try:
+            return path.read_text(errors="replace")
+        except FileNotFoundError:
+            return ""
+
+    def _render_line(self, node: TaskNode, err_p: Path
+                     ) -> tuple[str, float | None]:
+        """One node's protocol stanza: env overlay + eval + rc sentinel.
+        Task stdout flows back inline over the pipe; stderr spools to a
+        per-batch-index file (read back only on failure)."""
+        cmd, env = self._node_command(node)
+        if cmd is None:
+            raise RuntimeError(
+                f"task {node.task!r} has no shell command; lane workers "
+                "cannot run in-process registry callables")
+        prefix = ""
+        for k, v in (env or {}).items():
+            if not _ENV_NAME_RE.match(str(k)):
+                raise RuntimeError(f"invalid environment name {k!r}")
+            prefix += f"{k}={_sq(str(v))} "
+        timeout = payload_timeout(node)
+        line = (f"{prefix}command eval {_sq(cmd)} 2>{_sq(str(err_p))} "
+                f"</dev/null\n"
+                f"printf '\\n{self._sent}%d\\n' $?\n")
+        return line, float(timeout) if timeout else None
+
+    def _run_batch(self, idx: int, token: int, nodes: list[TaskNode],
+                   lane: dict) -> tuple[list[Any], list[str | None]]:
+        """Run one claimed chunk through the lane, pipelined: every
+        stanza goes down the pipe in ONE write, the shell executes the
+        commands back-to-back, and this thread drains rc sentinels and
+        spool files behind it — the pipe round-trip amortizes across the
+        whole chunk.  A timeout or dead lane fails the node at the read
+        head, respawns the worker, and resends the remainder."""
+        n = len(nodes)
+        values: list[Any] = [None] * n
+        errors: list[str | None] = ["lane batch aborted"] * n
+        spools = [self._spool / f"lane{idx}.{i}.err" for i in range(n)]
+        stanzas: dict[int, tuple[str, float | None]] = {}
+        for i, node in enumerate(nodes):
+            try:
+                stanzas[i] = self._render_line(node, spools[i])
+            except Exception as e:  # noqa: BLE001 — per-node isolation
+                errors[i] = f"{type(e).__name__}: {e}"
+        pending = [i for i in range(n) if i in stanzas]
+        stalls = 0
+        while pending:
+            with self._lock:
+                if token in self._cancelled or self._shutdown:
+                    for i in pending:
+                        errors[i] = "cancelled: dispatch abandoned"
+                    break
+            proc = lane.get("proc")
+            if proc is None or proc.poll() is not None:
+                lane["buf"] = bytearray()
+                proc = lane["proc"] = self._spawn(idx)
+                self.stats.respawns += 1
+            with self._lock:
+                self._active[token] = proc
+            buf = lane["buf"]
+            done_k = 0
+            sent = False
+            try:
+                blob = "".join(stanzas[i][0] for i in pending).encode()
+                proc.stdin.write(blob)
+                proc.stdin.flush()
+                sent = True
+                for k, i in enumerate(pending):
+                    t0 = time.monotonic()
+                    rc, out = self._read_result(proc, buf, stanzas[i][1])
+                    t1 = time.monotonic()
+                    stderr = self._slurp(spools[i]) if rc != 0 else ""
+                    values[i] = ShellResult(rc, out.decode(errors="replace"),
+                                            stderr, t1 - t0)
+                    errors[i] = None
+                    done_k = k + 1
+                pending = []
+            except (_LaneTimeout, _LaneGone, BrokenPipeError, OSError) as e:
+                self._kill(proc)
+                survivors = pending
+                if sent and done_k < len(pending):
+                    head = pending[done_k]
+                    if isinstance(e, _LaneTimeout):
+                        errors[head] = ("timeout: lane command exceeded "
+                                        f"{stanzas[head][1]}s")
+                    else:
+                        errors[head] = str(e) or "lane worker died"
+                    # commands past the read head may already have run:
+                    # their sentinels (and per-index spool files) survive
+                    # in the pipe buffer — harvest them so only nodes
+                    # that never executed are resent
+                    survivors = pending[done_k + 1:]
+                    harvested = 0
+                    for i in survivors:
+                        try:
+                            rc, out = self._read_result(proc, buf, 0.2)
+                        except (_LaneTimeout, _LaneGone, OSError):
+                            break
+                        stderr = self._slurp(spools[i]) if rc != 0 else ""
+                        values[i] = ShellResult(
+                            rc, out.decode(errors="replace"), stderr, 0.0)
+                        errors[i] = None
+                        harvested += 1
+                    survivors = survivors[harvested:]
+                proc.wait()
+                lane["proc"] = None
+                stalls = 0 if len(survivors) < len(pending) else stalls + 1
+                if stalls >= 3:     # lane keeps dying without progress
+                    for i in survivors:
+                        errors[i] = str(e) or "lane worker died"
+                    pending = []
+                else:
+                    pending = survivors
+            finally:
+                with self._lock:
+                    self._active.pop(token, None)
+        return values, errors
+
+    def _worker(self, idx: int) -> None:
+        lane: dict = {"proc": None, "buf": bytearray()}
+        try:
+            while True:
+                item = self._work.get()
+                if item is None:
+                    return
+                token, nodes = item
+                t0 = time.monotonic()
+                values, errors = self._run_batch(idx, token, nodes, lane)
+                t1 = time.monotonic()
+                self.stats.dispatches += 1
+                self.stats.tasks += len(nodes)
+                self._emit(token, values, errors, t0, t1, f"lane{idx}")
+        finally:
+            if lane.get("proc") is not None:
+                self._kill(lane["proc"])
+
+    def _emit(self, token: int, values: list[Any],
+              errors: list[str | None], t0: float, t1: float,
+              host: str) -> None:
+        if token < 0:       # run_gang internal dispatch
+            with self._gang_cv:
+                self._gang_out[token] = (values, errors)
+                self._gang_cv.notify_all()
+            return
+        self._events.put(
+            CompletionEvent(token, values, errors, t0, t1, host=host))
+
+
+def payload_timeout(node: TaskNode) -> Any:
+    """A node's WDL ``timeout`` keyword, if any."""
+    payload = node.payload if isinstance(node.payload, Mapping) else {}
+    return payload.get("timeout")
+
+
 #: every kind ``make_pool`` accepts (remote kinds live in ``remote.py``).
-VALID_POOL_KINDS = ("inline", "thread", "process", "ssh", "slurm", "pbs")
+VALID_POOL_KINDS = ("inline", "thread", "process", "lane", "ssh", "slurm",
+                    "pbs")
 
 
 def make_pool(kind: str, slots: int = 1, **remote_kwargs: Any) -> WorkerPool:
     """Construct a pool by name.
 
     Local kinds: ``inline``, ``thread``, ``process`` (``slots``
-    workers).  Remote kinds: ``ssh`` (requires ``hosts``; optional
-    ``ppnode``, ``transport``, ``render``) and ``slurm`` / ``pbs``
-    (optional ``nnodes``, ``ppnode``, ``submitter``, ``render``,
-    ``spool_root``) — their slot count is ``hosts × ppnode`` /
-    ``nnodes × ppnode``, not ``slots``.  An unknown kind raises a
-    ``ValueError`` naming every valid kind.
+    workers), and ``lane`` (``slots`` persistent shell workers; optional
+    ``render``, ``batch``, ``cwd`` — the short-task throughput path).
+    Remote kinds: ``ssh`` (requires ``hosts``; optional ``ppnode``,
+    ``transport``, ``render``) and ``slurm`` / ``pbs`` (optional
+    ``nnodes``, ``ppnode``, ``submitter``, ``render``, ``spool_root``)
+    — their slot count is ``hosts × ppnode`` / ``nnodes × ppnode``, not
+    ``slots``.  An unknown kind raises a ``ValueError`` naming every
+    valid kind.
     """
     if kind == "inline":
         return InlinePool()
@@ -290,6 +740,11 @@ def make_pool(kind: str, slots: int = 1, **remote_kwargs: Any) -> WorkerPool:
         return ThreadWorkerPool(slots)
     if kind == "process":
         return ProcessWorkerPool(slots)
+    if kind == "lane":
+        for k in ("hosts", "nnodes", "ppnode", "transport", "submitter",
+                  "spool_root"):
+            remote_kwargs.pop(k, None)
+        return LaneWorkerPool(slots, **remote_kwargs)
     if kind == "ssh":
         from .remote import SSHWorkerPool
 

@@ -1,0 +1,92 @@
+"""Group-commit append writer shared by the journal and provenance DB.
+
+One buffered writer over one long-lived append handle: entries
+accumulate in memory and flush as a group every ``flush_count`` appends
+or ``flush_interval`` seconds (checked at append time), dropping
+bookkeeping cost from one open+flush per record to amortized
+O(1/flush_count).  The default policy (1, None) is durable-per-append.
+
+The writer is deliberately lock-free: ``StudyJournal`` and ``StudyDB``
+call it under their own locks, which also guard the surrounding
+document state.  Readers get buffered-entry visibility through
+``pending()``.
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import Any
+
+
+class GroupCommitWriter:
+    """Buffered line appender with a group-commit flush policy."""
+
+    def __init__(self, path: Path, flush_count: int = 1,
+                 flush_interval: float | None = None) -> None:
+        self.path = Path(path)
+        self.flush_count = max(1, int(flush_count))
+        self.flush_interval = flush_interval
+        self.n_appends = 0          # lines handed to append()
+        self.n_flushes = 0          # group flushes actually performed
+        self._buf: list[str] = []
+        self._file: Any = None      # single long-lived append handle
+        self._last_flush = time.monotonic()
+
+    # writers ride along when a bound runner is pickled to a process
+    # pool; the open handle and unflushed buffer are process-local state
+    # (the parent keeps — and flushes — the buffer)
+    def __getstate__(self) -> dict:
+        state = self.__dict__.copy()
+        state["_file"] = None
+        state["_buf"] = []
+        return state
+
+    def append(self, line: str, force: bool = False) -> None:
+        """Buffer one line (must be newline-terminated); flush when
+        ``force`` is set or the count/interval policy says so."""
+        self._buf.append(line)
+        self.n_appends += 1
+        if (force
+                or len(self._buf) >= self.flush_count
+                or (self.flush_interval is not None
+                    and time.monotonic() - self._last_flush
+                    >= self.flush_interval)):
+            self.flush()
+
+    def pending(self) -> list[str]:
+        """Buffered-but-unflushed lines (read-through for readers)."""
+        return list(self._buf)
+
+    def flush(self) -> None:
+        if not self._buf:
+            return
+        if self._file is None:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            self._file = self.path.open("a")
+        self._file.write("".join(self._buf))
+        self._file.flush()
+        self._buf.clear()
+        self.n_flushes += 1
+        self._last_flush = time.monotonic()
+
+    def close(self) -> None:
+        """Flush and release the long-lived handle."""
+        self.flush()
+        if self._file is not None:
+            self._file.close()
+            self._file = None
+
+    def drop_buffered(self) -> None:
+        """Discard the buffer and release the handle without writing —
+        for compaction, when the caller has folded every buffered entry
+        into a fresh base document."""
+        self._buf.clear()
+        self.close()
+
+    def set_policy(self, flush_count: int,
+                   flush_interval: float | None) -> tuple[int, float | None]:
+        """Swap the flush policy, returning the previous one."""
+        prev = (self.flush_count, self.flush_interval)
+        self.flush_count = max(1, int(flush_count))
+        self.flush_interval = flush_interval
+        return prev

@@ -4,6 +4,14 @@ A study directory holds: the expanded configuration, one JSONL record per
 task attempt (status, runtime, metrics), and the study journal used for
 checkpoint/restart.  Plain files — no external DB — keeping the framework
 portable and user-space, as the paper requires.
+
+Like the journal, the record stream supports *group commit*: by default
+every ``record`` is an open+write+close (durable per attempt); under the
+``group_commit()`` context manager records buffer against one long-lived
+handle and flush per batch (``flush_count`` entries / ``flush_interval``
+seconds), with two hard guarantees — a non-``ok`` record flushes its
+batch immediately (failure forensics never wait), and exiting the
+context (normally or via an exception) flushes everything.
 """
 from __future__ import annotations
 
@@ -13,8 +21,11 @@ import json
 import os
 import threading
 import time
+from contextlib import contextmanager
 from pathlib import Path
 from typing import Any, Iterator, Mapping
+
+from .groupcommit import GroupCommitWriter
 
 
 def config_hash(obj: Any) -> str:
@@ -25,15 +36,19 @@ def config_hash(obj: Any) -> str:
 class StudyDB:
     """Append-only provenance store for one parameter study."""
 
-    def __init__(self, root: str | Path, study: str) -> None:
+    def __init__(self, root: str | Path, study: str, flush_count: int = 1,
+                 flush_interval: float | None = None) -> None:
         self.dir = Path(root) / study
         self.dir.mkdir(parents=True, exist_ok=True)
         self.records_path = self.dir / "records.jsonl"
         self.meta_path = self.dir / "study.json"
+        self._writer = GroupCommitWriter(self.records_path, flush_count,
+                                         flush_interval)
         self._lock = threading.Lock()
 
     # the DB rides along when a bound runner is pickled to a process
-    # pool; the lock is process-local state
+    # pool; the lock is process-local state (the writer drops its own
+    # handle and buffer — the parent keeps, and flushes, the originals)
     def __getstate__(self) -> dict:
         state = self.__dict__.copy()
         del state["_lock"]
@@ -42,6 +57,41 @@ class StudyDB:
     def __setstate__(self, state: dict) -> None:
         self.__dict__.update(state)
         self._lock = threading.Lock()
+
+    # -- group-commit machinery ------------------------------------------
+    @property
+    def n_appends(self) -> int:
+        """Records handed to ``record()``."""
+        return self._writer.n_appends
+
+    @property
+    def n_flushes(self) -> int:
+        """Group flushes actually performed."""
+        return self._writer.n_flushes
+
+    def flush(self) -> None:
+        """Force buffered records to disk now."""
+        with self._lock:
+            self._writer.flush()
+
+    def close(self) -> None:
+        """Flush and release the long-lived record handle."""
+        with self._lock:
+            self._writer.close()
+
+    @contextmanager
+    def group_commit(self, flush_count: int = 64,
+                     flush_interval: float | None = 0.2):
+        """Batch records for the enclosed block; flush-on-exit holds for
+        normal returns and raised exceptions alike."""
+        with self._lock:
+            prev = self._writer.set_policy(flush_count, flush_interval)
+        try:
+            yield self
+        finally:
+            with self._lock:
+                self._writer.set_policy(*prev)
+                self._writer.close()
 
     # -- study-level metadata -------------------------------------------
     def write_meta(self, meta: Mapping[str, Any]) -> None:
@@ -81,10 +131,13 @@ class StudyDB:
         if index is not None:
             rec["index"] = int(index)
         line = json.dumps(rec, default=str) + "\n"
-        with self._lock, self.records_path.open("a") as f:
-            f.write(line)
+        with self._lock:
+            # a failed attempt flushes its whole batch immediately:
+            # post-mortems must never wait on a group-commit window
+            self._writer.append(line, force=status != "ok")
 
     def records(self) -> Iterator[dict[str, Any]]:
+        self.flush()
         if not self.records_path.exists():
             return iter(())
         def _it() -> Iterator[dict[str, Any]]:

@@ -155,6 +155,38 @@ class VirtualPool(WorkerPool):
         return CompletionEvent(token, [value], [error], start, stop)
 
 
+class _StreamingMedian:
+    """Dual-heap running median: O(log n) insert, O(1) query.
+
+    Matches ``sorted(xs)[len(xs) // 2]`` (the upper median) exactly, so
+    swapping it in for the per-event ``sorted()`` recompute changes no
+    speculation decision — only the cost, from O(n log n) per completion
+    to O(log n)."""
+
+    __slots__ = ("_lo", "_hi")
+
+    def __init__(self) -> None:
+        self._lo: list[float] = []   # max-heap (negated): lower half
+        self._hi: list[float] = []   # min-heap: upper half (≥ lower)
+
+    def add(self, x: float) -> None:
+        if self._lo and x <= -self._lo[0]:
+            heapq.heappush(self._lo, -x)
+        else:
+            heapq.heappush(self._hi, x)
+        if len(self._hi) > len(self._lo) + 1:
+            heapq.heappush(self._lo, -heapq.heappop(self._hi))
+        elif len(self._lo) > len(self._hi):
+            heapq.heappush(self._hi, -heapq.heappop(self._lo))
+
+    def __len__(self) -> int:
+        return len(self._lo) + len(self._hi)
+
+    def median(self) -> float:
+        """The upper median (undefined on an empty stream)."""
+        return self._hi[0]
+
+
 @dataclasses.dataclass
 class _Dispatch:
     """One in-flight batch occupying a slot."""
@@ -237,6 +269,7 @@ class Scheduler:
         pool: WorkerPool | None = None,
         source: Any = None,
         window: int | None = None,
+        keep_results: bool = True,
     ) -> dict[str, TaskResult]:
         """Run every node once its deps are satisfied.
 
@@ -260,6 +293,12 @@ class Scheduler:
         fires before its node is retired, so callbacks may still read
         ``dag.nodes[res.id]``.  ``self.peak_live_nodes`` records the
         high-water mark after a run.
+
+        ``keep_results=False`` turns the run into a pure result stream:
+        ``on_result`` still fires per resolution, but ``TaskResult``\\ s
+        are not accumulated and the returned dict is empty — combined
+        with streaming admission, engine memory stays O(slots + window)
+        end to end instead of O(N_W).
         """
         if (source is None) != (window is None):
             raise ValueError("source and window must be passed together")
@@ -272,7 +311,7 @@ class Scheduler:
             pool = InlinePool()
         try:
             return self._event_loop(dag, runner, completed, on_result, pool,
-                                    source, window)
+                                    source, window, keep_results)
         finally:
             if own_pool:
                 pool.shutdown()
@@ -287,23 +326,29 @@ class Scheduler:
         pool: WorkerPool,
         source: Any = None,
         window: int | None = None,
+        keep_results: bool = True,
     ) -> dict[str, TaskResult]:
         streaming = source is not None
         succ = dag.successors()
         indeg = {nid: sum(1 for d in n.deps if d not in completed)
                  for nid, n in dag.nodes.items()}
         results: dict[str, TaskResult] = {}
+        resolved_ids: set[str] = set()      # live membership (see _retire)
+        n_resolved = 0
         for nid in sorted(dag.nodes):
             if nid in completed:
-                results[nid] = TaskResult(
-                    id=nid, status="ok", runtime=0.0, started=0.0,
-                    finished=0.0, attempts=0, value=None)
+                resolved_ids.add(nid)
+                n_resolved += 1
+                if keep_results:
+                    results[nid] = TaskResult(
+                        id=nid, status="ok", runtime=0.0, started=0.0,
+                        finished=0.0, attempts=0, value=None)
 
         ready = [nid for nid in dag.nodes
                  if nid not in completed and indeg[nid] == 0]
         self._sort_ready(ready)
 
-        #: every admitted node eventually lands in ``results``
+        #: every admitted node eventually resolves exactly once
         expected = len(dag.nodes)
         exhausted = not streaming
         self.peak_live_nodes = len(dag.nodes)
@@ -311,13 +356,18 @@ class Scheduler:
         failed_closure: set[str] = set()
         attempts: dict[str, int] = {}
         first_started: dict[str, float] = {}
-        runtimes: list[float] = []
+        runtimes = _StreamingMedian()
         free: list[int] = list(range(self.slots))
         heapq.heapify(free)
         running: dict[int, _Dispatch] = {}
         live_tokens: dict[str, set[int]] = {}   # node id → in-flight tokens
         abandoned: dict[int, int] = {}          # zombie token → held slot
         tokens = itertools.count()
+        # incremental deadline/straggler tracking: min-heaps with lazy
+        # invalidation (an entry whose token left ``running`` is stale),
+        # replacing per-event O(running) scans
+        deadline_heap: list[tuple[float, int]] = []   # (deadline, token)
+        strag_heap: list[tuple[float, int]] = []      # (dispatched, token)
 
         def _mark_failed_closure(root: str) -> None:
             stack = [root]
@@ -336,16 +386,25 @@ class Scheduler:
             dag.nodes.pop(nid, None)
             succ.pop(nid, None)
             indeg.pop(nid, None)
+            if not keep_results:
+                # a retired node can never resolve again (late events die
+                # in the ``abandoned`` branch), so its membership record
+                # is droppable too — state stays O(slots + window)
+                resolved_ids.discard(nid)
 
         def _resolve(res: TaskResult) -> None:
-            results[res.id] = res
+            nonlocal n_resolved
+            resolved_ids.add(res.id)
+            n_resolved += 1
+            if keep_results:
+                results[res.id] = res
             if res.status == "ok":
-                runtimes.append(res.runtime)
+                runtimes.add(res.runtime)
             if on_result:
                 on_result(res)      # node still live: dag.nodes[res.id] ok
             for s in succ[res.id]:
                 indeg[s] -= 1
-                if indeg[s] == 0 and s not in results:
+                if indeg[s] == 0 and s not in resolved_ids:
                     bisect.insort(ready, s, key=self._order_key)
             _retire(res.id)
 
@@ -358,7 +417,7 @@ class Scheduler:
             strict.  ``force`` admits one batch regardless (progress
             guarantee when the whole budget is smaller than one
             instance).  Returns True when anything was admitted."""
-            nonlocal expected, exhausted
+            nonlocal expected, exhausted, n_resolved
             admitted_any = False
             while not (exhausted and not pending):
                 if not pending:
@@ -393,9 +452,12 @@ class Scheduler:
                     if node.id in done_ids:
                         # already complete (resume): resolved silently,
                         # exactly like eager pre-completed nodes
-                        results[node.id] = TaskResult(
-                            id=node.id, status="ok", runtime=0.0,
-                            started=0.0, finished=0.0, attempts=0)
+                        resolved_ids.add(node.id)
+                        n_resolved += 1
+                        if keep_results:
+                            results[node.id] = TaskResult(
+                                id=node.id, status="ok", runtime=0.0,
+                                started=0.0, finished=0.0, attempts=0)
                         _retire(node.id)
                     elif indeg[node.id] == 0:
                         bisect.insort(ready, node.id, key=self._order_key)
@@ -442,13 +504,28 @@ class Scheduler:
                 live_tokens.setdefault(nid, set()).add(token)
             running[token] = _Dispatch(token, nids, slot, now, budget,
                                        deadline, speculative)
+            if deadline is not None:
+                heapq.heappush(deadline_heap, (deadline, token))
+                # lazy-invalidated entries can pile up below a long-lived
+                # top; compact when mostly stale so streaming runs keep
+                # their O(slots + window) state bound
+                if len(deadline_heap) > 2 * len(running) + 16:
+                    deadline_heap[:] = [e for e in deadline_heap
+                                        if e[1] in running]
+                    heapq.heapify(deadline_heap)
+            if self.speculate and not speculative and len(nids) == 1:
+                heapq.heappush(strag_heap, (now, token))
+                if len(strag_heap) > 2 * len(running) + 16:
+                    strag_heap[:] = [e for e in strag_heap
+                                     if e[1] in running]
+                    heapq.heapify(strag_heap)
             pool.submit(token, runner, nodes)
 
         def _handle_outcome(d: _Dispatch, nid: str, value: Any,
                             error: str | None, started: float,
                             finished: float, host: str | None = None) -> None:
             live_tokens.get(nid, set()).discard(d.token)
-            if nid in results:      # duplicate copy lost the race
+            if nid in resolved_ids:     # duplicate copy lost the race
                 return
             node = dag.nodes[nid]
             if (error is None and d.budget
@@ -458,7 +535,15 @@ class Scheduler:
             if error is None:
                 error = self._classify(node, value)
             if error is not None and d.speculative:
-                return              # failed duplicate: primary still runs
+                # failed duplicate: the primary still runs — make it a
+                # straggler candidate again (its heap entry was consumed
+                # when this duplicate launched)
+                for t in live_tokens.get(nid, ()):
+                    pd = running.get(t)
+                    if pd is not None and not pd.speculative \
+                            and len(pd.nids) == 1:
+                        heapq.heappush(strag_heap, (pd.dispatched, t))
+                return
             fs = first_started.setdefault(nid, started)
             if error is not None and attempts.get(nid, 0) <= self.max_retries:
                 bisect.insort(ready, nid, key=self._order_key)  # retry
@@ -490,22 +575,23 @@ class Scheduler:
         def _median_runtime() -> float | None:
             if len(runtimes) < 5:
                 return None
-            med = sorted(runtimes)[len(runtimes) // 2]
+            med = runtimes.median()
             return med if med > 0 else None
 
         while True:
             _admit()
-            if exhausted and not pending and len(results) >= expected:
+            if exhausted and not pending and n_resolved >= expected:
                 break
             # resolve failure-closure nodes without occupying slots
             while True:
                 doomed = [nid for nid in ready if nid in failed_closure]
                 ready[:] = [nid for nid in ready
-                            if nid not in failed_closure and nid not in results]
+                            if nid not in failed_closure
+                            and nid not in resolved_ids]
                 if not doomed:
                     break
                 for nid in doomed:
-                    if nid not in results:
+                    if nid not in resolved_ids:
                         _skip(nid)
 
             while free and ready:
@@ -514,20 +600,24 @@ class Scheduler:
                     break
                 _dispatch(batch, speculative=False)
 
-            # speculative straggler duplicates on leftover slots
+            # speculative straggler duplicates on leftover slots: pop the
+            # earliest-dispatched candidates past the cutoff (entries are
+            # lazily invalidated; a consumed-but-still-running primary is
+            # re-pushed if its duplicate fails)
             med = _median_runtime() if self.speculate else None
-            if med is not None and free:
+            if med is not None and free and strag_heap:
                 now = self.clock()
-                for d in list(running.values()):
-                    if not free:
-                        break
-                    if d.speculative or len(d.nids) != 1:
-                        continue
+                cutoff = now - self.straggler_factor * med
+                while free and strag_heap and strag_heap[0][0] <= cutoff:
+                    _, tok = heapq.heappop(strag_heap)
+                    d = running.get(tok)
+                    if d is None or d.speculative or len(d.nids) != 1:
+                        continue    # stale entry
                     nid = d.nids[0]
-                    if len(live_tokens.get(nid, ())) > 1:
-                        continue    # already duplicated
-                    if now - d.dispatched >= self.straggler_factor * med:
-                        _dispatch([nid], speculative=True)
+                    if nid in resolved_ids \
+                            or len(live_tokens.get(nid, ())) > 1:
+                        continue    # resolved or already duplicated
+                    _dispatch([nid], speculative=True)
 
             if not running and not abandoned:
                 if ready:
@@ -536,29 +626,42 @@ class Scheduler:
                     continue        # window was full of doomed/blocked work
                 # nothing running, ready, or admittable → remaining deps
                 # unsatisfiable
-                for nid in sorted(set(dag.nodes) - set(results)):
-                    if nid not in results:
+                for nid in sorted(set(dag.nodes) - resolved_ids):
+                    if nid not in resolved_ids:
                         _skip(nid)
                 break
 
-            # expire overdue dispatches before (and instead of) waiting
+            # expire overdue dispatches before (and instead of) waiting —
+            # earliest-deadline-first off the heap, not an O(running) scan
             now = self.clock()
-            overdue = [d for d in running.values()
-                       if d.deadline is not None and now >= d.deadline]
-            if overdue:
-                for d in overdue:
+            expired_any = False
+            while deadline_heap and deadline_heap[0][0] <= now:
+                _, tok = heapq.heappop(deadline_heap)
+                d = running.get(tok)
+                if d is not None:
                     _expire(d, now)
+                    expired_any = True
+            if expired_any:
                 continue
 
             wait: float | None = None
-            horizons = [d.deadline for d in running.values()
-                        if d.deadline is not None]
+            horizons = []
+            while deadline_heap and deadline_heap[0][1] not in running:
+                heapq.heappop(deadline_heap)    # stale: dispatch finished
+            if deadline_heap:
+                horizons.append(deadline_heap[0][0])
             if med is not None:
-                horizons += [
-                    d.dispatched + self.straggler_factor * med
-                    for d in running.values()
-                    if not d.speculative and len(d.nids) == 1
-                    and len(live_tokens.get(d.nids[0], ())) == 1]
+                # earliest still-eligible straggler candidate bounds the
+                # next speculation horizon
+                while strag_heap:
+                    t0s, tok = strag_heap[0]
+                    d = running.get(tok)
+                    if (d is None or d.speculative or len(d.nids) != 1
+                            or len(live_tokens.get(d.nids[0], ())) != 1):
+                        heapq.heappop(strag_heap)
+                        continue
+                    horizons.append(t0s + self.straggler_factor * med)
+                    break
             future = [h for h in horizons if h > now]
             if future:
                 wait = max(1e-4, min(future) - now)

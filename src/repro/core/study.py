@@ -29,15 +29,16 @@ Two execution shapes share every backend, retry, and journal semantic:
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from pathlib import Path
 from typing import Any, Callable, Iterator, Mapping, Sequence
 
-from .interpolate import render_command, render_environ
+from .interpolate import compile_environ, compile_template
 from .dag import TaskDAG, TaskNode
 from .executors import (
-    GangExecutor, GangPool, WorkerPool, make_pool, run_subprocess,
-    stackable_key,
+    GangExecutor, GangPool, WorkerPool, make_pool, payload_timeout,
+    run_subprocess, stackable_key,
 )
 from .paramspace import ParameterSpace, combo_id, from_task
 from .provenance import StudyDB
@@ -64,6 +65,35 @@ def _strip_ns(combo: Mapping[str, Any], task: str) -> dict[str, Any]:
     return local
 
 
+class _LazyStudies(Mapping):
+    """Per-task combo projections for inter-task ``${task:...}``
+    references, materialized only if a reference actually resolves
+    through them — rendering a node with no inter-task refs never pays
+    the O(tasks × combo) projection the eager dict paid per node."""
+
+    __slots__ = ("_tasks", "_combo", "_cache")
+
+    def __init__(self, tasks: Mapping[str, Any],
+                 combo: Mapping[str, Any]) -> None:
+        self._tasks = tasks
+        self._combo = combo
+        self._cache: dict[str, dict[str, Any]] = {}
+
+    def __getitem__(self, key: str) -> dict[str, Any]:
+        if key not in self._tasks:
+            raise KeyError(key)
+        hit = self._cache.get(key)
+        if hit is None:
+            hit = self._cache[key] = _strip_ns(self._combo, key)
+        return hit
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._tasks)
+
+    def __len__(self) -> int:
+        return len(self._tasks)
+
+
 class ParameterStudy:
     """Orchestrates expansion → DAG → scheduling → provenance."""
 
@@ -73,10 +103,20 @@ class ParameterStudy:
         registry: TaskRegistry | None = None,
         root: str | Path = ".papas",
         name: str | None = None,
+        flush_count: int = 64,
+        flush_interval: float | None = 0.2,
     ) -> None:
+        """``flush_count``/``flush_interval`` set the group-commit policy
+        ``run()`` applies to the journal and provenance DB for the
+        duration of a run (see ``StudyJournal.group_commit``): records
+        buffer and flush per batch instead of per task, and are always
+        flushed before ``run()`` returns or raises.  Outside a run both
+        stores keep their durable-per-write default."""
         self.spec = spec
         self.registry = dict(registry or {})
         self.name = name or "_".join(spec.tasks)[:48]
+        self.flush_count = flush_count
+        self.flush_interval = flush_interval
         self.db = StudyDB(root, self.name)
         self.journal = StudyJournal(self.db.dir / "journal.json")
 
@@ -161,16 +201,22 @@ class ParameterStudy:
 
     # -- rendering ----------------------------------------------------------
     def render_node(self, node: TaskNode) -> tuple[str | None, dict[str, str]]:
-        """Interpolate the command line and environment for one node."""
+        """Render the command line and environment for one node.
+
+        Uses compiled instance templates: each distinct command/environ
+        template parses once per process (``interpolate.compile_template``)
+        and every instance render is a list join over resolved slots —
+        byte-identical to the reference ``interpolate()`` path, minus the
+        per-instance regex work.  Inter-task ``${task:...}`` projections
+        are built lazily, only if a reference resolves through them."""
         task = self.spec.tasks[node.task]
-        studies = {
-            other: _strip_ns(node.payload["global_combo"], other)
-            for other in self.spec.tasks
-        }
         cmd = None
         if task.command:
-            cmd = render_command(task.command, node.combo, node.task, studies)
-        env = render_environ(task.environ, node.combo)
+            studies = _LazyStudies(self.spec.tasks,
+                                   node.payload["global_combo"])
+            cmd = compile_template(task.command).render(
+                node.combo, node.task, studies)
+        env = compile_environ(tuple(task.environ)).render(node.combo)
         return cmd, env
 
     def visualize(self, fmt: str = "ascii",
@@ -186,10 +232,9 @@ class ParameterStudy:
         if cmd is None:
             raise RuntimeError(
                 f"task {node.task!r} has no command and no registered callable")
-        timeout = None
-        if isinstance(node.payload, Mapping):
-            timeout = node.payload.get("timeout")
-        return run_subprocess(cmd, env=env, timeout=timeout)
+        # ambient env snapshotted once per run, not copied per task
+        return run_subprocess(cmd, env=env, timeout=payload_timeout(node),
+                              base_env=getattr(self, "_run_base_env", None))
 
     def _remote_spec_defaults(self) -> dict[str, Any]:
         """Remote-execution keywords from the WDL, merged across tasks.
@@ -234,6 +279,8 @@ class ParameterStudy:
             return GangPool(gang), True
         if isinstance(pool, WorkerPool):
             return pool, False
+        if pool == "lane":
+            return make_pool("lane", slots, render=self.render_node), True
         if pool in ("ssh", "slurm", "pbs", "batch"):
             d = self._remote_spec_defaults()
             kind = pool if pool != "batch" else (d["batch"] or "slurm")
@@ -316,6 +363,8 @@ class ParameterStudy:
         transport: Any = None,
         submitter: Any = None,
         window: int | None = None,
+        on_result: Callable[[TaskResult], None] | None = None,
+        keep_results: bool = True,
     ) -> dict[str, TaskResult]:
         """Execute the study through the unified event engine.
 
@@ -323,10 +372,12 @@ class ParameterStudy:
         (checkpoint/restart; either journal version resumes under either
         path).  ``pool`` selects the execution backend: ``"inline"``
         (deterministic, serial), ``"thread"`` / ``"process"`` (real
-        parallelism across ``slots`` workers), ``"ssh"`` / ``"slurm"`` /
-        ``"pbs"`` (remote dispatch of rendered commands — slot count
-        comes from ``hosts × ppnode`` / ``nnodes × ppnode``, defaulting
-        to the WDL ``hosts:``/``batch:``/``nnodes``/``ppnode`` keywords;
+        parallelism across ``slots`` workers), ``"lane"`` (persistent
+        shell worker lanes — the short-task throughput path; tasks must
+        render to shell commands), ``"ssh"`` / ``"slurm"`` / ``"pbs"``
+        (remote dispatch of rendered commands — slot count comes from
+        ``hosts × ppnode`` / ``nnodes × ppnode``, defaulting to the WDL
+        ``hosts:``/``batch:``/``nnodes``/``ppnode`` keywords;
         ``transport`` / ``submitter`` inject the network seam, e.g. the
         no-network ``LocalTransport``/``LocalSubmitter`` fakes), or any
         ``WorkerPool`` instance.  ``gang`` switches to batched dispatch —
@@ -341,13 +392,24 @@ class ParameterStudy:
         ``slots + N`` task nodes stay live, and the journal is compact
         v2 — startup and memory stay O(slots + window) however large the
         space (``window=None`` keeps the eager whole-DAG path).
+
+        ``on_result`` streams each ``TaskResult`` to the caller as it
+        resolves (after journal/provenance bookkeeping).
+        ``keep_results=False`` additionally skips the O(N_W) result
+        accumulation — the returned dict is empty and, combined with
+        ``window=N``, a 10^5-combination run holds O(slots + window)
+        engine state end to end.  Journal and provenance DB writes are
+        group-committed for the duration of the run (see
+        ``flush_count``/``flush_interval`` on the constructor) and are
+        always flushed before this method returns or raises.
         """
         if window is not None:
             return self._run_windowed(
                 window=window, slots=slots, resume=resume, runner=runner,
                 gang=gang, max_retries=max_retries, pool=pool,
                 speculate=speculate, hosts=hosts, ppnode=ppnode,
-                nnodes=nnodes, transport=transport, submitter=submitter)
+                nnodes=nnodes, transport=transport, submitter=submitter,
+                on_result=on_result, keep_results=keep_results)
         instances = self.instances()
         completed: set[str] = set()
         if resume and self.journal.exists():
@@ -379,6 +441,13 @@ class ParameterStudy:
         self.journal.save(instances, completed, {"name": self.name},
                           hosts=host_map)
 
+        worker, owned = self._make_worker(pool, gang, slots, hosts, ppnode,
+                                          nnodes, transport, submitter)
+        # lane-style pools report transient local labels as hosts: they
+        # stay in the per-attempt records, never the journal host map
+        # (which must stay O(remote tasks), not O(N_W))
+        keep_hosts = getattr(worker, "durable_hosts", True)
+
         def _on_result(res: TaskResult) -> None:
             node = dag.nodes[res.id]
             self.db.record(res.id, res.status, res.runtime, combo=node.combo,
@@ -386,12 +455,13 @@ class ParameterStudy:
                            slot=res.slot, host=res.host)
             if res.status == "ok":
                 completed.add(res.id)
-                if res.host:
-                    host_map[res.id] = res.host
-                self.journal.mark_complete(res.id, host=res.host)
+                host = res.host if keep_hosts else None
+                if host:
+                    host_map[res.id] = host
+                self.journal.mark_complete(res.id, host=host)
+            if on_result is not None:
+                on_result(res)
 
-        worker, owned = self._make_worker(pool, gang, slots, hosts, ppnode,
-                                          nnodes, transport, submitter)
         # remote pools derive their capacity from hosts/nnodes × ppnode;
         # the scheduler must drive every dispatch lane the pool offers
         # (for batch pools that is the allocation count, not the group
@@ -399,9 +469,15 @@ class ParameterStudy:
         slots = max(slots, getattr(worker, "dispatch_slots", slots) or slots)
         sched = Scheduler(slots=slots, max_retries=max_retries,
                           speculate=speculate)
+        self._run_base_env = dict(os.environ)   # one snapshot per run
         try:
-            results = sched.execute(dag, run_fn, completed=completed,
-                                    on_result=_on_result, pool=worker)
+            with self.journal.group_commit(self.flush_count,
+                                           self.flush_interval), \
+                    self.db.group_commit(self.flush_count,
+                                         self.flush_interval):
+                results = sched.execute(dag, run_fn, completed=completed,
+                                        on_result=_on_result, pool=worker,
+                                        keep_results=keep_results)
         finally:
             if owned:
                 worker.shutdown()
@@ -429,6 +505,8 @@ class ParameterStudy:
         nnodes: int | None,
         transport: Any,
         submitter: Any,
+        on_result: Callable[[TaskResult], None] | None = None,
+        keep_results: bool = True,
     ) -> dict[str, TaskResult]:
         """Streaming execution: windowed admission + journal v2."""
         space = self.space()
@@ -475,6 +553,12 @@ class ParameterStudy:
         dag = TaskDAG()
         run_fn = runner or self._default_runner
 
+        worker, owned = self._make_worker(pool, gang, slots, hosts, ppnode,
+                                          nnodes, transport, submitter)
+        # see the eager path: transient lane labels never enter the
+        # journal host map — streaming journals stay O(completed ranges)
+        keep_hosts = getattr(worker, "durable_hosts", True)
+
         def _on_result(res: TaskResult) -> None:
             # fires before the scheduler retires the node, so the lookup
             # below sees the live TaskNode
@@ -484,21 +568,29 @@ class ParameterStudy:
                            error=res.error, attempts=res.attempts,
                            slot=res.slot, host=res.host, index=idx)
             if res.status == "ok":
-                if res.host:
-                    host_map[res.id] = res.host
+                host = res.host if keep_hosts else None
+                if host:
+                    host_map[res.id] = host
                 if idx is not None:
                     completed_idx.setdefault(node.task, set()).add(idx)
-                self.journal.mark_complete(res.id, host=res.host, index=idx,
+                self.journal.mark_complete(res.id, host=host, index=idx,
                                            task=node.task)
+            if on_result is not None:
+                on_result(res)
 
-        worker, owned = self._make_worker(pool, gang, slots, hosts, ppnode,
-                                          nnodes, transport, submitter)
         slots = max(slots, getattr(worker, "dispatch_slots", slots) or slots)
         sched = Scheduler(slots=slots, max_retries=max_retries,
                           speculate=speculate)
+        self._run_base_env = dict(os.environ)   # one snapshot per run
         try:
-            results = sched.execute(dag, run_fn, on_result=_on_result,
-                                    pool=worker, source=source, window=window)
+            with self.journal.group_commit(self.flush_count,
+                                           self.flush_interval), \
+                    self.db.group_commit(self.flush_count,
+                                         self.flush_interval):
+                results = sched.execute(dag, run_fn, on_result=_on_result,
+                                        pool=worker, source=source,
+                                        window=window,
+                                        keep_results=keep_results)
         finally:
             if owned:
                 worker.shutdown()

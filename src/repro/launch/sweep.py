@@ -10,7 +10,10 @@ arch/shape, different scalars) into ONE compiled program via
 ``repro.train.ensemble`` — the TPU realization of the paper's
 job-batching (§4.3).  ``--slots N --pool thread|process`` runs instances
 concurrently through the engine's worker pools (the paper's
-``nnodes × ppnode`` resource knob).
+``nnodes × ppnode`` resource knob); ``--pool lane`` feeds rendered shell
+commands to persistent worker lanes — the short-task throughput path
+(sub-100ms tasks dispatch at thousands/sec instead of being
+scheduler-bound on process spawn).
 
 Remote backends (paper §4.3 distributed parallelization):
 ``--pool ssh --hosts a,b --ppnode 2`` dispatches rendered shell
@@ -59,7 +62,9 @@ def main() -> None:
                     help="concurrent execution slots (local pools)")
     ap.add_argument("--pool", default="inline",
                     help="execution backend for non-gang runs: inline, "
-                         "thread, process, ssh, slurm, or pbs")
+                         "thread, process, lane (persistent shell worker "
+                         "lanes — short-task throughput), ssh, slurm, "
+                         "or pbs")
     ap.add_argument("--hosts", default=None,
                     help="comma-separated host list for --pool ssh "
                          "(default: the WDL hosts: keyword)")

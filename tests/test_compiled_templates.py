@@ -1,0 +1,194 @@
+"""Compiled-template equivalence (the throughput rendering path).
+
+``CompiledTemplate.render`` / ``CompiledEnviron.render`` must be
+byte-identical to the reference ``interpolate()`` / ``render_command`` /
+``render_environ`` implementations across the WDL corpus used elsewhere
+in the test suite, including the ``${...}`` edge cases: missing keys,
+nested braces, numeric formatting, and values that re-introduce
+references.
+"""
+import pytest
+
+from repro.core import (
+    CompiledEnviron, CompiledTemplate, InterpolationError, ParameterStudy,
+    compile_template, interpolate, parse_yaml, render_command,
+    render_environ,
+)
+
+#: WDL corpus: the specs exercised across tests/ (paper Fig. 5 matmul,
+#: quickstart sweeps, inter-task chains)
+WDL_CORPUS = [
+    """
+matmulOMP:
+  environ:
+    OMP_NUM_THREADS: ["1:8"]
+  args:
+    size: ["16:*2:16384"]
+  command: matmul ${args:size} result_${args:size}N_${environ:OMP_NUM_THREADS}T.txt
+""",
+    """
+sweep:
+  args:
+    a: ["1:5"]
+    b: [0.5, 1.0, 2.5]
+    mode: [fast, slow]
+  command: run --a=${args:a} --b=${args:b} --mode=${mode}
+""",
+    """
+prep:
+  args:
+    outfile: [data_a.bin, data_b.bin]
+  command: make ${args:outfile}
+consume:
+  after: [prep]
+  args:
+    k: ["1:3"]
+  command: consume ${prep:args:outfile} k=${args:k}
+""",
+]
+
+
+def _all_nodes(wdl: str):
+    study = ParameterStudy(parse_yaml(wdl), root="/tmp/papas_ctpl",
+                           name="ctpl")
+    dag = study.build_dag()
+    return study, dag
+
+
+class TestCorpusEquivalence:
+    @pytest.mark.parametrize("wdl", WDL_CORPUS)
+    def test_commands_and_environ_byte_identical(self, wdl):
+        study, dag = _all_nodes(wdl)
+        n_checked = 0
+        for node in dag.nodes.values():
+            task = study.spec.tasks[node.task]
+            studies = {
+                other: {k.split("/", 1)[1]: v
+                        for k, v in node.payload["global_combo"].items()
+                        if k.startswith(other + "/")}
+                for other in study.spec.tasks
+            }
+            # the study's own render path vs the reference functions
+            cmd, env = study.render_node(node)
+            assert cmd == render_command(task.command, node.combo,
+                                         node.task, studies)
+            assert env == render_environ(task.environ, node.combo)
+            # and the compiled template directly vs interpolate()
+            tpl = CompiledTemplate(task.command)
+            assert tpl.render(node.combo, node.task, studies) == \
+                interpolate(task.command, node.combo, node.task, studies)
+            n_checked += 1
+        assert n_checked == len(dag.nodes) > 0
+
+
+class TestEdgeCases:
+    COMBO = {"args:size": 64, "environ:OMP_NUM_THREADS": 4,
+             "args:mode": "fast", "a:x": 2.0}
+
+    def _both(self, text, combo, studies=None):
+        ref = interpolate(text, combo, studies=studies)
+        got = CompiledTemplate(text).render(combo, studies=studies)
+        assert got == ref
+        return got
+
+    def test_static_template_is_identity(self):
+        tpl = CompiledTemplate("no slots here")
+        assert tpl.static
+        assert tpl.render({}) == "no slots here"
+
+    def test_basic_and_bare_keyword(self):
+        assert self._both("run ${args:size} m=${mode}", self.COMBO) \
+            == "run 64 m=fast"
+
+    def test_missing_key_raises_both(self):
+        with pytest.raises(InterpolationError):
+            interpolate("${nope}", self.COMBO)
+        with pytest.raises(InterpolationError):
+            CompiledTemplate("${nope}").render(self.COMBO)
+
+    def test_numeric_formatting(self):
+        # integral floats render without the trailing .0
+        assert self._both("${x}", {"a:x": 2.0}) == "2"
+        assert self._both("${x}", {"a:x": 2.5}) == "2.5"
+        assert self._both("${x}", {"a:x": -3.0}) == "-3"
+
+    def test_nested_braces_unresolvable(self):
+        # ${a${b}} — the regex grabs "a${b"; both paths raise identically
+        with pytest.raises(InterpolationError):
+            interpolate("${a${b}}", self.COMBO)
+        with pytest.raises(InterpolationError):
+            CompiledTemplate("${a${b}}").render(self.COMBO)
+
+    def test_nested_braces_resolvable(self):
+        combo = {"q:a${b": "inner"}
+        assert self._both("${a${b}}", combo) == "inner}"
+
+    def test_unclosed_brace_passthrough(self):
+        assert self._both("${unclosed", self.COMBO) == "${unclosed"
+
+    def test_value_reintroduces_reference(self):
+        # one level of nesting: a resolved value containing ${...}
+        combo = {"a:outer": "${inner}", "b:inner": "deep"}
+        assert self._both("${outer}", combo) == "deep"
+
+    def test_value_is_its_own_placeholder(self):
+        # fixpoint: the value renders to exactly its own reference
+        combo = {"a:x": "${x}"}
+        assert self._both("${x}", combo) == "${x}"
+
+    def test_inter_task_reference(self):
+        studies = {"prep": {"args:outfile": "data.bin"}}
+        assert self._both("consume ${prep:args:outfile}", {},
+                          studies=studies) == "consume data.bin"
+
+    def test_environ_equivalence_including_absent_keys(self):
+        environ = {"OMP_NUM_THREADS": [1], "UNSET_VAR": [1]}
+        combo = {"environ:OMP_NUM_THREADS": 4.0}
+        ref = render_environ(environ, combo)
+        got = CompiledEnviron(tuple(environ)).render(combo)
+        assert got == ref == {"OMP_NUM_THREADS": "4"}
+
+    def test_compile_cache_identity(self):
+        assert compile_template("x ${a:b}") is compile_template("x ${a:b}")
+
+
+# -- property test (hypothesis optional; the deterministic corpus above
+# -- runs regardless, mirroring the tests/test_*_props.py split) --------
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:     # pragma: no cover - CI always has hypothesis
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    _keys = st.sampled_from(["args:a", "args:b", "environ:V", "args:mode"])
+    _vals = st.one_of(st.integers(-100, 100),
+                      st.floats(-100, 100, allow_nan=False),
+                      st.text(alphabet="abcXYZ_-.", max_size=8))
+    _combo = st.dictionaries(_keys, _vals, min_size=1, max_size=4)
+    _chunk = st.one_of(
+        st.text(alphabet="abc xyz-_=./", max_size=10),
+        _keys.map(lambda k: "${%s}" % k),
+        _keys.map(lambda k: "${%s}" % k.split(":", 1)[1]),
+        st.just("${missing}"),
+    )
+
+    class TestPropertyEquivalence:
+        @settings(max_examples=200, deadline=None)
+        @given(chunks=st.lists(_chunk, max_size=8), combo=_combo)
+        def test_render_matches_interpolate(self, chunks, combo):
+            text = "".join(chunks)
+            try:
+                ref = interpolate(text, combo)
+                ref_err = None
+            except InterpolationError as e:
+                ref, ref_err = None, str(e)
+            try:
+                got = CompiledTemplate(text).render(combo)
+                got_err = None
+            except InterpolationError as e:
+                got, got_err = None, str(e)
+            assert got == ref
+            assert (got_err is None) == (ref_err is None)
+            if ref_err is not None:
+                assert got_err == ref_err

@@ -1,0 +1,197 @@
+"""Group-commit durability (journal + provenance batched writers).
+
+The contract under test: batching may defer disk writes, but (1) a run
+that *raises* mid-study still flushes every completion recorded before
+the failure, (2) a run killed through pool shutdown does the same, (3)
+readers always see buffered entries, and (4) the amortization is real —
+N appends produce far fewer than N flushes.
+"""
+import json
+
+import pytest
+
+from repro.core import (
+    ParameterStudy, StudyDB, StudyJournal, WorkerPool, parse_yaml,
+)
+
+WDL = """
+work:
+  args:
+    x: ["1:12"]
+  command: noop ${args:x}
+"""
+
+
+def make_study(tmp_path, registry, name="gc", **kw):
+    return ParameterStudy(parse_yaml(WDL), registry=registry,
+                          root=tmp_path, name=name, **kw)
+
+
+class TestJournalBatching:
+    def test_appends_buffer_until_flush_count(self, tmp_path):
+        j = StudyJournal(tmp_path / "j.json", flush_count=4)
+        for i in range(3):
+            j.mark_complete(f"t@{i}")
+        assert not j.log_path.exists()          # still buffered
+        assert j.n_appends == 3 and j.n_flushes == 0
+        j.mark_complete("t@3")                  # 4th append → group flush
+        assert j.log_path.exists()
+        assert j.n_flushes == 1
+        assert len(j.log_path.read_text().splitlines()) == 4
+
+    def test_readers_see_buffered_entries(self, tmp_path):
+        j = StudyJournal(tmp_path / "j.json", flush_count=100)
+        j.mark_complete("t@0", host="h1")
+        j.mark_complete("t@1")
+        state = j.load_state()                  # nothing flushed yet
+        assert state.completed == {"t@0", "t@1"}
+        assert j.hosts() == {"t@0": "h1"}
+
+    def test_flush_and_close_force_durability(self, tmp_path):
+        j = StudyJournal(tmp_path / "j.json", flush_count=100)
+        j.mark_complete("t@0")
+        j.flush()
+        # a fresh object (≈ restarted process) sees the entry on disk
+        assert StudyJournal(tmp_path / "j.json").load_state().completed \
+            == {"t@0"}
+        j.mark_complete("t@1")
+        j.close()
+        assert StudyJournal(tmp_path / "j.json").load_state().completed \
+            == {"t@0", "t@1"}
+
+    def test_group_commit_context_restores_policy(self, tmp_path):
+        j = StudyJournal(tmp_path / "j.json")   # legacy: durable per write
+        with j.group_commit(flush_count=50):
+            j.mark_complete("t@0")
+            assert not j.log_path.exists()
+        assert j.log_path.exists()              # flushed on exit
+        j.mark_complete("t@1")                  # immediate again
+        assert len(j.log_path.read_text().splitlines()) == 2
+
+    def test_compaction_absorbs_buffered_entries(self, tmp_path):
+        j = StudyJournal(tmp_path / "j.json", flush_count=100)
+        j.mark_complete("t@0")
+        # caller folds its completed set into the base (run() semantics)
+        j.save([], {"t@0"}, {})
+        assert not j.log_path.exists()
+        assert j.load_state().completed == {"t@0"}
+
+
+class TestDBBatching:
+    def test_failure_flushes_immediately(self, tmp_path):
+        db = StudyDB(tmp_path, "s", flush_count=100)
+        db.record("t@0", "ok", 0.1)
+        assert not db.records_path.exists()     # buffered
+        db.record("t@1", "failed", 0.1, error="boom")
+        assert db.records_path.exists()         # failure forced the flush
+        assert len(db.records_path.read_text().splitlines()) == 2
+
+    def test_records_reader_flushes(self, tmp_path):
+        db = StudyDB(tmp_path, "s", flush_count=100)
+        db.record("t@0", "ok", 0.1)
+        assert {r["task_id"] for r in db.records()} == {"t@0"}
+        assert db.records_path.exists()
+
+
+class _Bomb(Exception):
+    pass
+
+
+class TestRunRaisesMidStudy:
+    def test_no_completed_entry_lost_on_raise(self, tmp_path):
+        """A user on_result callback raising mid-study aborts the run;
+        every completion recorded before the raise must be durable."""
+        seen = []
+
+        def boom(res):
+            seen.append(res.id)
+            if len(seen) == 7:
+                raise _Bomb("mid-study failure")
+
+        study = make_study(tmp_path, {"work": lambda c: 0},
+                           flush_count=1000, flush_interval=None)
+        with pytest.raises(_Bomb):
+            study.run(on_result=boom)
+        assert len(seen) == 7
+        # fresh objects (≈ restarted process): all 7 completions durable
+        j = StudyJournal(study.journal.path)
+        assert j.load_state().completed == set(seen)
+        db = StudyDB(tmp_path, "gc")
+        assert db.completed_ids() == set(seen)
+        # and the resumed run only executes the remainder
+        ran = []
+        study2 = make_study(tmp_path, {"work": lambda c: ran.append(c) or 0})
+        res = study2.run(resume=True)
+        assert len(ran) == 12 - 7
+        assert all(r.status == "ok" for r in res.values())
+
+    def test_windowed_raise_loses_nothing(self, tmp_path):
+        seen = []
+
+        def boom(res):
+            seen.append(res.id)
+            if len(seen) == 5:
+                raise _Bomb
+
+        study = make_study(tmp_path, {"work": lambda c: 0}, name="gcw",
+                           flush_count=1000, flush_interval=None)
+        with pytest.raises(_Bomb):
+            study.run(window=2, on_result=boom)
+        state = StudyJournal(study.journal.path).load_state()
+        assert state.version == 2
+        assert len(state.completed_indices["work"]) == 5
+
+    def test_pool_shutdown_kill_loses_nothing(self, tmp_path):
+        """A pool dying mid-run (next_event raising — e.g. the backend
+        was shut down under the scheduler) propagates, and buffered
+        completions still hit disk before run() raises."""
+
+        class DyingPool(WorkerPool):
+            kind = "dying"
+
+            def __init__(self, die_after):
+                self.die_after = die_after
+                self._events = []
+                self._served = 0
+
+            def submit(self, token, runner, nodes):
+                import time as _t
+                t0 = _t.monotonic()
+                values, errors = [], []
+                for node in nodes:
+                    values.append(runner(node))
+                    errors.append(None)
+                from repro.core import CompletionEvent
+                self._events.append(
+                    CompletionEvent(token, values, errors, t0, _t.monotonic()))
+
+            def next_event(self, timeout=None):
+                if self._served >= self.die_after:
+                    raise RuntimeError("pool shut down")
+                self._served += 1
+                return self._events.pop(0) if self._events else None
+
+        study = make_study(tmp_path, {"work": lambda c: 0}, name="gck",
+                           flush_count=1000, flush_interval=None)
+        with pytest.raises(RuntimeError, match="pool shut down"):
+            study.run(pool=DyingPool(die_after=6))
+        state = StudyJournal(study.journal.path).load_state()
+        assert len(state.completed) == 6
+        db = StudyDB(tmp_path, "gck")
+        assert len(db.completed_ids()) == 6
+
+
+class TestAmortization:
+    def test_flushes_far_fewer_than_appends(self, tmp_path):
+        study = make_study(tmp_path, {"work": lambda c: 0}, name="gca",
+                           flush_count=64, flush_interval=None)
+        study.run()
+        assert study.journal.n_appends == 12
+        assert study.db.n_appends == 12
+        # 12 completions, flush_count 64 → exactly one flush each at
+        # run exit (plus zero mid-run)
+        assert study.journal.n_flushes <= 2
+        assert study.db.n_flushes <= 2
+        # post-run state identical to the unbatched world
+        doc = json.loads(study.journal.path.read_text())
+        assert len(doc["completed"]) == 12

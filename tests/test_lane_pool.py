@@ -1,0 +1,273 @@
+"""LaneWorkerPool — persistent worker lanes (short-task throughput path).
+
+Covers: pipe-protocol execution with stdout capture, per-task env
+scoping (no leakage between tasks on the same lane), gang-style take
+batching, nonzero-exit classification through the scheduler, timeout →
+lane kill → respawn recovery, cancel semantics, study-level integration
+(``pool="lane"``), and the ``run_gang`` GangRunner adapter.
+"""
+import time
+
+import pytest
+
+from repro.core import (
+    GangExecutor, LaneWorkerPool, ParameterStudy, Scheduler, TaskDAG,
+    TaskNode, make_pool, parse_yaml, stackable_key,
+)
+
+
+def _payload_render(node):
+    return node.payload.get("command"), node.payload.get("env") or {}
+
+
+def _dag(commands, task="t", envs=None):
+    dag = TaskDAG()
+    for i, cmd in enumerate(commands):
+        payload = {"command": cmd}
+        if envs and envs[i]:
+            payload["env"] = envs[i]
+        dag.add(TaskNode(id=f"{task}{i:03d}", task=task, combo={},
+                         payload=payload))
+    return dag
+
+
+class TestLaneExecution:
+    def test_commands_run_with_stdout_captured(self):
+        dag = _dag([f"echo out{i}" for i in range(10)])
+        pool = LaneWorkerPool(2, render=_payload_render)
+        try:
+            res = Scheduler(slots=2).execute(dag, None, pool=pool)
+        finally:
+            pool.shutdown()
+        assert all(r.status == "ok" for r in res.values())
+        for i in range(10):
+            assert res[f"t{i:03d}"].value.stdout == f"out{i}\n"
+        # host provenance names the executing lane
+        assert all((r.host or "").startswith("lane") for r in res.values())
+
+    def test_stdout_without_trailing_newline(self):
+        dag = _dag(["printf noline"])
+        pool = LaneWorkerPool(1, render=_payload_render)
+        try:
+            res = Scheduler(slots=1).execute(dag, None, pool=pool)
+        finally:
+            pool.shutdown()
+        assert res["t000"].value.stdout == "noline"
+
+    def test_env_scoped_per_task_no_lane_leakage(self):
+        # both tasks run on the SAME lane; the first's env must not leak
+        dag = _dag(["echo v=${PAPAS_X:-unset}", "echo v=${PAPAS_X:-unset}"],
+                   envs=[{"PAPAS_X": "42"}, None])
+        pool = LaneWorkerPool(1, render=_payload_render, batch=2)
+        try:
+            res = Scheduler(slots=1).execute(dag, None, pool=pool)
+        finally:
+            pool.shutdown()
+        assert res["t000"].value.stdout == "v=42\n"
+        assert res["t001"].value.stdout == "v=unset\n"
+
+    def test_builtin_noop_runs_without_fork(self):
+        # `true` is a shell builtin: the whole batch is zero-fork
+        dag = _dag(["true"] * 16)
+        pool = LaneWorkerPool(2, render=_payload_render, batch=8)
+        try:
+            res = Scheduler(slots=2).execute(dag, None, pool=pool)
+        finally:
+            pool.shutdown()
+        assert all(r.status == "ok" for r in res.values())
+        assert pool.stats.tasks == 16
+        # batched, not per-task (chunks shrink adaptively near the tail:
+        # 8+4+2+1+1 across 2 slots)
+        assert pool.stats.dispatches <= 6
+        assert pool.stats.batching_factor >= 2.5
+
+    def test_nonzero_exit_classified_with_stderr(self):
+        dag = _dag(["sh -c 'echo broke >&2; exit 3'", "echo fine"])
+        pool = LaneWorkerPool(1, render=_payload_render, batch=2)
+        try:
+            res = Scheduler(slots=1, max_retries=0).execute(dag, None,
+                                                            pool=pool)
+        finally:
+            pool.shutdown()
+        assert res["t000"].status == "failed"
+        assert "nonzero exit 3" in res["t000"].error
+        assert "broke" in res["t000"].error      # stderr spool read back
+        assert res["t001"].status == "ok"
+
+    def test_registry_only_node_fails_with_clear_error(self):
+        dag = TaskDAG()
+        dag.add(TaskNode(id="x", task="t", combo={}, payload={}))
+        pool = LaneWorkerPool(1, render=_payload_render)
+        try:
+            res = Scheduler(slots=1, max_retries=0).execute(dag, None,
+                                                            pool=pool)
+        finally:
+            pool.shutdown()
+        assert res["x"].status == "failed"
+        assert "no shell command" in res["x"].error
+
+
+class TestTimeoutAndRecovery:
+    def test_timeout_kills_lane_and_later_tasks_recover(self):
+        dag = TaskDAG()
+        dag.add(TaskNode(id="a", task="t", combo={},
+                         payload={"command": "echo one", "timeout": 10}))
+        dag.add(TaskNode(id="b", task="t", combo={},
+                         payload={"command": "sleep 30", "timeout": 0.3}))
+        dag.add(TaskNode(id="c", task="t", combo={},
+                         payload={"command": "echo three", "timeout": 10}))
+        pool = LaneWorkerPool(1, render=_payload_render, batch=3)
+        t0 = time.monotonic()
+        try:
+            res = Scheduler(slots=1, max_retries=0).execute(dag, None,
+                                                            pool=pool)
+        finally:
+            pool.shutdown()
+        assert time.monotonic() - t0 < 10       # never waited out the sleep
+        assert res["a"].status == "ok" and res["a"].value.stdout == "one\n"
+        assert res["b"].status == "failed" and "timeout" in res["b"].error
+        # c was resent after the lane respawned
+        assert res["c"].status == "ok" and res["c"].value.stdout == "three\n"
+        assert pool.stats.respawns >= 1
+
+    def test_scheduler_cancel_frees_slot(self):
+        # scheduler-side deadline expiry abandons the dispatch and
+        # cancel() kills the lane; the slot must return to service
+        dag = TaskDAG()
+        dag.add(TaskNode(id="slow", task="t", combo={},
+                         payload={"command": "sleep 30", "timeout": 0.2}))
+        dag.add(TaskNode(id="next", task="t", combo={},
+                         payload={"command": "echo ok"}))
+        pool = LaneWorkerPool(1, render=_payload_render, batch=1)
+        try:
+            res = Scheduler(slots=1, max_retries=0).execute(dag, None,
+                                                            pool=pool)
+        finally:
+            pool.shutdown()
+        assert res["slow"].status == "failed"
+        assert res["next"].status == "ok"
+
+
+class TestStudyIntegration:
+    WDL = """
+sweep:
+  environ:
+    PAPAS_N: ["1:3"]
+  args:
+    word: [alpha, beta]
+  command: echo ${args:word}_${environ:PAPAS_N}
+"""
+
+    def test_pool_lane_end_to_end(self, tmp_path):
+        study = ParameterStudy(parse_yaml(self.WDL), root=tmp_path,
+                               name="lane_e2e")
+        res = study.run(pool="lane", slots=2)
+        assert len(res) == 6
+        assert all(r.status == "ok" for r in res.values())
+        outs = {r.value.stdout.strip() for r in res.values()}
+        assert outs == {f"{w}_{n}" for w in ("alpha", "beta")
+                        for n in (1, 2, 3)}
+        # lane identity is per-attempt provenance (records.jsonl), NOT
+        # durable journal host state — a 10^5-task windowed run must not
+        # grow an O(N_W) journal host map out of lane labels
+        recs = {r["task_id"]: r for r in study.db.records()}
+        assert len(recs) == 6
+        assert all(r["host"].startswith("lane") for r in recs.values())
+        assert study.journal.hosts() == {}
+
+    def test_windowed_lane_composes(self, tmp_path):
+        study = ParameterStudy(parse_yaml(self.WDL), root=tmp_path,
+                               name="lane_win")
+        seen = []
+        res = study.run(pool="lane", slots=2, window=2,
+                        on_result=lambda r: seen.append(r.id),
+                        keep_results=False)
+        assert res == {}                        # streamed, not accumulated
+        assert len(seen) == 6
+        state = study.journal.load_state()
+        assert state.version == 2
+        assert len(state.completed_indices["sweep"]) == 6
+
+    def test_windowed_lane_resumes_from_v2_journal(self, tmp_path):
+        """Interrupt a windowed lane run mid-study; the resume re-admits
+        only the remainder and the final journal is compact v2."""
+        class Stop(Exception):
+            pass
+
+        seen = []
+
+        def tripwire(res):
+            seen.append(res.id)
+            if len(seen) == 3:
+                raise Stop
+
+        study = ParameterStudy(parse_yaml(self.WDL), root=tmp_path,
+                               name="lane_resume")
+        with pytest.raises(Stop):
+            study.run(pool="lane", slots=1, window=1, on_result=tripwire)
+        done_before = len(
+            study.journal.load_state().completed_indices["sweep"])
+        assert done_before == 3
+
+        resumed = ParameterStudy(parse_yaml(self.WDL), root=tmp_path,
+                                 name="lane_resume")
+        res = resumed.run(pool="lane", slots=2, window=2, resume=True)
+        assert all(r.status == "ok" for r in res.values())
+        state = resumed.journal.load_state()
+        assert state.version == 2
+        assert len(state.completed_indices["sweep"]) == 6
+        assert resumed.last_run_stats["skipped_complete"] == 3
+
+    def test_lane_renders_byte_identical_to_eager(self, tmp_path):
+        """window + lane + group-commit compose: rendered commands match
+        the eager regex path byte for byte."""
+        study = ParameterStudy(parse_yaml(self.WDL), root=tmp_path,
+                               name="lane_render")
+        from repro.core import render_command
+        for node in study.build_dag().nodes.values():
+            task = study.spec.tasks[node.task]
+            cmd, _ = study.render_node(node)
+            assert cmd == render_command(task.command, node.combo, node.task,
+                                         {node.task: dict(node.combo)})
+
+    def test_make_pool_kind(self):
+        pool = make_pool("lane", 2, render=_payload_render, batch=4)
+        try:
+            assert pool.kind == "lane" and pool.slots == 2
+        finally:
+            pool.shutdown()
+
+    def test_unknown_kind_error_names_lane(self):
+        with pytest.raises(ValueError, match="lane"):
+            make_pool("warp", 1)
+
+
+class TestRunGang:
+    def test_gang_runner_adapter(self):
+        nodes = [TaskNode(id=f"g{i}", task="t", combo={"args:i": i},
+                          payload={"command": f"echo g{i}"})
+                 for i in range(10)]
+        pool = LaneWorkerPool(3, render=_payload_render)
+        try:
+            values = pool.run_gang(nodes)
+        finally:
+            pool.shutdown()
+        assert [v.stdout for v in values] == [f"g{i}\n" for i in range(10)]
+
+    def test_gang_executor_through_lanes(self, tmp_path):
+        wdl = """
+fleet:
+  args:
+    i: ["1:6"]
+  command: echo member_${args:i}
+"""
+        study = ParameterStudy(parse_yaml(wdl), root=tmp_path, name="gl")
+        pool = LaneWorkerPool(2, render=study.render_node)
+        gang = GangExecutor(stackable_key, pool.run_gang)
+        try:
+            res = study.run(gang=gang)
+        finally:
+            pool.shutdown()
+        assert all(r.status == "ok" for r in res.values())
+        assert gang.stats.tasks == 6
+        assert gang.stats.dispatches < 6        # fused batches

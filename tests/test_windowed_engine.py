@@ -90,6 +90,32 @@ class TestWindowedStudy:
         assert all(r.status == "ok" for r in res.values())
         assert max(r.attempts for r in res.values()) == 2
 
+    def test_result_streaming_skips_accumulation(self, tmp_path):
+        """``on_result`` + ``keep_results=False``: every completion
+        streams through the callback, nothing accumulates, and the
+        journal still records everything."""
+        seen = []
+        study = ParameterStudy(parse_yaml(SMALL),
+                               registry={"work": lambda c: c["args:x"]},
+                               root=tmp_path, name="stream")
+        res = study.run(window=2, on_result=lambda r: seen.append(r),
+                        keep_results=False)
+        assert res == {}                        # no O(N_W) result dict
+        assert len(seen) == 6
+        assert all(r.status == "ok" for r in seen)
+        assert sorted(r.value for r in seen) == [1, 1, 2, 2, 3, 3]
+        state = study.journal.load_state()
+        assert len(state.completed_indices["work"]) == 6
+
+    def test_on_result_streams_in_eager_mode_too(self, tmp_path):
+        seen = []
+        study = ParameterStudy(parse_yaml(SMALL),
+                               registry={"work": lambda c: 0},
+                               root=tmp_path, name="stream_eager")
+        res = study.run(on_result=lambda r: seen.append(r.id))
+        assert len(seen) == 6 and len(res) == 6
+        assert set(seen) == set(res)
+
     def test_journal_is_v2_and_compact(self, tmp_path):
         study = ParameterStudy(parse_yaml(SMALL),
                                registry={"work": lambda c: 0},
