@@ -16,9 +16,13 @@ The throughput rows quantify the short-task dispatch path: tasks/sec on
 10^4 no-op shell tasks through the full study pipeline (render →
 dispatch → journal → provenance), thread pool vs persistent worker
 lanes vs windowed lanes — compiled templates, gang-style lane batching,
-and group-commit recording are what separate the rows.  ``--throughput``
-runs only these rows and exits nonzero if the lane pool regresses below
-half the recorded baseline (the CI floor).
+and group-commit recording are what separate the rows.  The
+``lane_capture`` row re-runs the lane case with two regex ``capture:``
+extractors per task (the results subsystem's whole per-completion tax:
+extraction + classification + metric recording).  ``--throughput`` runs
+only these rows and exits nonzero if the lane pool regresses below half
+the recorded baseline (the CI floor), loses its ≥5× margin over the
+thread pool, or capture drops below 80% of the bare-lane floor.
 """
 from __future__ import annotations
 
@@ -134,6 +138,23 @@ t:
   command: "true"
 """
 
+#: the no-op sweep with metric capture: the task emits one line (echo is
+#: a shell builtin, like ``true`` — no fork) and two regex extractors
+#: pull metrics from it per completion.  The delta vs the bare lane row
+#: is the whole results-subsystem tax: extraction + classification +
+#: metric recording.
+WDL_NOOP_CAPTURE = """
+t:
+  args:
+    i: ["1:10000"]
+  command: echo "a=1 b=2"
+  capture:
+    a:
+      regex: "a=([0-9]+)"
+      required: true
+    b: "b=([0-9]+)"
+"""
+
 
 def _throughput_rows() -> list[tuple[str, float, dict]]:
     """tasks/sec at 10^4 no-op shell tasks through the full pipeline
@@ -147,9 +168,11 @@ def _throughput_rows() -> list[tuple[str, float, dict]]:
             ("lane", dict(pool="lane", slots=SLOTS)),
             ("windowed_lane", dict(pool="lane", slots=SLOTS, window=256,
                                    keep_results=False)),
+            ("lane_capture", dict(pool="lane", slots=SLOTS)),
         ]
         for label, kwargs in cases:
-            study = ParameterStudy(parse_yaml(WDL_NOOP), root=root,
+            wdl = WDL_NOOP_CAPTURE if label == "lane_capture" else WDL_NOOP
+            study = ParameterStudy(parse_yaml(wdl), root=root,
                                    name=f"tp_{label}")
             n = study.instance_count()
             done = [0]
@@ -180,6 +203,18 @@ def _throughput_rows() -> list[tuple[str, float, dict]]:
                   "floor_tasks_per_sec": LANE_TASKS_PER_SEC_BASELINE / 2,
                   "above_floor": tps["lane"]
                   >= LANE_TASKS_PER_SEC_BASELINE / 2}))
+    # results-subsystem tax: 2 regex captures per task must cost <20% of
+    # the bare-lane throughput floor, so extraction can never silently
+    # regress the short-task path.  Gated against the recorded floor
+    # (stable across runs) with the measured same-run ratio reported.
+    capture_floor = 0.8 * (LANE_TASKS_PER_SEC_BASELINE / 2)
+    rows.append(("engine_capture_overhead", 0.0,
+                 {"capture_tasks_per_sec": round(tps["lane_capture"]),
+                  "bare_tasks_per_sec": round(tps["lane"]),
+                  "measured_overhead_pct": round(
+                      100 * (1 - tps["lane_capture"] / tps["lane"]), 1),
+                  "floor_tasks_per_sec": round(capture_floor),
+                  "above_floor": tps["lane_capture"] >= capture_floor}))
     return rows
 
 
@@ -188,17 +223,25 @@ def check_throughput_floor() -> int:
     pool falls below half the recorded baseline or loses its ≥5× margin
     over the thread pool."""
     rows = _throughput_rows()
-    ok = True
+    ok = capture_ok = True
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
         if name == "engine_lane_speedup_vs_thread":
             ok = derived["meets_5x"] and derived["above_floor"]
+        if name == "engine_capture_overhead":
+            capture_ok = derived["above_floor"]
     if not ok:
         print("FAIL: lane-pool throughput regressed "
               f"(floor {LANE_TASKS_PER_SEC_BASELINE / 2:.0f} tasks/s, "
               "required ≥5x thread pool)", file=sys.stderr)
         return 1
-    print("throughput floor OK")
+    if not capture_ok:
+        print("FAIL: metric capture regressed the lane path "
+              f"(capture rows must stay >= 80% of the "
+              f"{LANE_TASKS_PER_SEC_BASELINE / 2:.0f} tasks/s bare-lane "
+              "floor)", file=sys.stderr)
+        return 1
+    print("throughput floor OK (incl. capture overhead)")
     return 0
 
 

@@ -28,14 +28,26 @@ long-lived ``sh`` per slot fed rendered commands over a pipe protocol —
 the short-task throughput path.  The smoke asserts per-attempt lane
 provenance in records.jsonl (and that transient lane labels stay OUT of
 the journal host map).
+
+    PYTHONPATH=src python examples/quickstart.py --report
+
+runs the paper's §6 performance-study shape (``examples/
+matmul_perf.yaml``: threads × size over a stand-in compute with
+``capture:`` extraction and a 1-thread ``baseline:``) through windowed
+lanes with ``keep_results=False``, then *asserts* the streamed
+speedup/efficiency pivot — the stand-in scales perfectly, so speedup
+must equal the thread count — and that the offline report from
+``records.jsonl`` reproduces the live table cell for cell.
 """
 import argparse
 import resource
 import time
+from pathlib import Path
 
 import numpy as np
 
-from repro.core import LocalTransport, ParameterStudy, parse_yaml
+from repro.core import (LocalTransport, ParameterStudy, ResultsAggregator,
+                        load_study, parse_yaml)
 
 WDL = """
 matmulOMP:
@@ -150,6 +162,39 @@ def run_windowed(window: int, slots: int = 4) -> None:
           f"for {n} instances (completed ranges: {doc['completed']})")
 
 
+def run_perf_report(window: int = 16, slots: int = 2) -> None:
+    """Performance-study smoke: matmul_perf.yaml streamed through
+    windowed lanes, speedup table asserted against the stand-in's
+    perfect scaling, offline report asserted equal to the live one."""
+    from repro.launch.report import aggregate_records, speedup_report
+
+    study = load_study(Path(__file__).parent / "matmul_perf.yaml",
+                       root="/tmp/papas_quickstart", name="quickstart_perf")
+    agg = ResultsAggregator(["size", "threads"])
+    study.run(pool="lane", slots=slots, window=window, keep_results=False,
+              aggregator=agg)
+    baseline = {"threads": 1}
+    derived = agg.speedup("time", baseline)
+    n = study.instance_count()
+    assert agg.n_grouped == n, \
+        f"report smoke: {agg.n_grouped}/{n} instances aggregated"
+    for (size, threads), vals in derived.items():
+        assert vals["speedup"] is not None and \
+            abs(vals["speedup"] - threads) < 0.05 * threads, \
+            f"report smoke: speedup at {size}x{threads} = {vals['speedup']}"
+        assert abs(vals["efficiency"] - 1.0) < 0.05, \
+            f"report smoke: efficiency at {size}x{threads} " \
+            f"= {vals['efficiency']}"
+    live = speedup_report(agg, "time", baseline)
+    offline_agg = aggregate_records(study.db.dir, ["size", "threads"])
+    offline = speedup_report(offline_agg, "time", baseline)
+    assert live == offline, \
+        "report smoke: offline records.jsonl table diverges from live"
+    print(live)
+    print(f"[report] speedup == threads for all {len(derived)} groups; "
+          f"offline table reproduces the live one")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--pool", default="inline",
@@ -159,7 +204,14 @@ def main():
     ap.add_argument("--window", type=int, default=None,
                     help="run the 16k-combo streaming smoke with this "
                          "admission window")
+    ap.add_argument("--report", action="store_true",
+                    help="run the matmul performance-study smoke "
+                         "(capture + streaming aggregation + speedup "
+                         "table, live and offline)")
     args = ap.parse_args()
+    if args.report:
+        run_perf_report()
+        return
     if args.window is not None:
         run_windowed(args.window)
         return

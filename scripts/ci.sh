@@ -26,6 +26,11 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
     tests/test_compiled_templates.py tests/test_lane_pool.py \
     tests/test_group_commit.py
 
+# results subsystem: capture grammar, streaming aggregation, resume
+# semantics for metrics, report rendering — pinned by name
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+    tests/test_results.py tests/test_report.py tests/test_viz.py
+
 # end-to-end smoke: a study through the SSH worker pool (hosts × ppnode
 # slots, LocalTransport fake — commands run locally, no network), with
 # per-task hosts asserted in the journal by the example itself
@@ -43,8 +48,16 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py \
     --pool lane
 
+# performance-study smoke: the paper's §6 shape (threads × size with
+# capture: + baseline:) streamed through windowed lanes; the example
+# asserts the speedup/efficiency pivot AND that the offline
+# records.jsonl report reproduces the live table
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py \
+    --report
+
 # short-task throughput floor: 10^4 no-op tasks through thread vs lane
-# vs windowed-lane; fails if the lane pool drops below half the recorded
-# baseline or loses its >=5x margin over the thread pool
+# vs windowed-lane vs lane+capture; fails if the lane pool drops below
+# half the recorded baseline, loses its >=5x margin over the thread
+# pool, or metric capture costs more than 20% of the bare-lane floor
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python \
     benchmarks/engine_overhead.py --throughput

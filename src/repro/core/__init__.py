@@ -30,6 +30,20 @@ from .interpolate import (
 )
 from .paramspace import ParameterSpace, combo_id, from_task
 from .provenance import StudyDB, config_hash
+from .results import (
+    BUILTIN_CAPTURES,
+    CaptureError,
+    CaptureSet,
+    CaptureSpec,
+    KeyResolutionError,
+    MetricStats,
+    ResultsAggregator,
+    build_capture_sets,
+    infer_scalar,
+    parse_capture,
+    parse_captures,
+    resolve_key,
+)
 from .remote import (
     BatchWorkerPool,
     LocalSubmitter,
@@ -83,6 +97,10 @@ __all__ = [
     "render_environ", "substitute_content",
     "ParameterSpace", "combo_id", "from_task",
     "StudyDB", "config_hash",
+    "BUILTIN_CAPTURES", "CaptureError", "CaptureSet", "CaptureSpec",
+    "KeyResolutionError", "MetricStats", "ResultsAggregator",
+    "build_capture_sets", "infer_scalar", "parse_capture", "parse_captures",
+    "resolve_key",
     "ScheduleEvent", "Scheduler", "TaskResult", "VirtualClock", "VirtualPool",
     "dispatch_count", "makespan",
     "JournalState", "StudyJournal", "compress_ranges", "expand_ranges",

@@ -386,7 +386,13 @@ class LaneWorkerPool(WorkerPool):
         render: LaneRenderFn | None = None,
         batch: int = 8,
         cwd: str | None = None,
+        capture_stderr: bool = False,
     ) -> None:
+        """``capture_stderr=True`` reads the per-task stderr spool back
+        even on success — required when a ``capture:`` extractor sources
+        stderr (the results layer asks for it via the study's pool
+        wiring); the default keeps the success path's
+        two-fewer-file-round-trips economy."""
         if slots < 1:
             raise ValueError("slots must be >= 1")
         if batch < 1:
@@ -395,6 +401,7 @@ class LaneWorkerPool(WorkerPool):
         self.render = render
         self.batch = batch
         self.cwd = cwd
+        self.capture_stderr = capture_stderr
         self.stats = LaneStats()
         self._base_env = dict(os.environ)   # snapshot once per pool
         # per-pool random rc sentinel: task stdout flows back inline over
@@ -633,7 +640,8 @@ class LaneWorkerPool(WorkerPool):
                     t0 = time.monotonic()
                     rc, out = self._read_result(proc, buf, stanzas[i][1])
                     t1 = time.monotonic()
-                    stderr = self._slurp(spools[i]) if rc != 0 else ""
+                    stderr = (self._slurp(spools[i])
+                              if rc != 0 or self.capture_stderr else "")
                     values[i] = ShellResult(rc, out.decode(errors="replace"),
                                             stderr, t1 - t0)
                     errors[i] = None
@@ -660,7 +668,8 @@ class LaneWorkerPool(WorkerPool):
                             rc, out = self._read_result(proc, buf, 0.2)
                         except (_LaneTimeout, _LaneGone, OSError):
                             break
-                        stderr = self._slurp(spools[i]) if rc != 0 else ""
+                        stderr = (self._slurp(spools[i])
+                                  if rc != 0 or self.capture_stderr else "")
                         values[i] = ShellResult(
                             rc, out.decode(errors="replace"), stderr, 0.0)
                         errors[i] = None

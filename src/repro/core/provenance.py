@@ -3,7 +3,10 @@
 A study directory holds: the expanded configuration, one JSONL record per
 task attempt (status, runtime, metrics), and the study journal used for
 checkpoint/restart.  Plain files — no external DB — keeping the framework
-portable and user-space, as the paper requires.
+portable and user-space, as the paper requires.  The ``metrics`` field
+carries the results subsystem's captured values (WDL ``capture:``, see
+``repro.core.results``); ``repro.launch.report`` rebuilds any live
+aggregation table offline from this stream.
 
 Like the journal, the record stream supports *group commit*: by default
 every ``record`` is an open+write+close (durable per attempt); under the

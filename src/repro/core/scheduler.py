@@ -74,6 +74,7 @@ class TaskResult:
     slot: int = -1              # real slot occupied (execute and simulate)
     speculative: bool = False   # won by a speculative duplicate dispatch
     host: str | None = None     # executing host / allocation (remote pools)
+    metrics: dict[str, Any] | None = None   # captured metrics (results layer)
 
 
 @dataclasses.dataclass
@@ -270,6 +271,7 @@ class Scheduler:
         source: Any = None,
         window: int | None = None,
         keep_results: bool = True,
+        classify: Callable[[TaskNode, Any], str | None] | None = None,
     ) -> dict[str, TaskResult]:
         """Run every node once its deps are satisfied.
 
@@ -299,6 +301,14 @@ class Scheduler:
         are not accumulated and the returned dict is empty — combined
         with streaming admission, engine memory stays O(slots + window)
         end to end instead of O(N_W).
+
+        ``classify`` is an extra post-completion classifier applied
+        after the built-in nonzero-exit check: given ``(node, value)``
+        it returns an error string to fail the attempt (retries and
+        failure closure apply, exactly like a nonzero exit) or ``None``
+        to accept it — the seam the results layer uses to fail attempts
+        whose *required* captured metrics are missing.  A raising
+        classifier fails the attempt rather than the study.
         """
         if (source is None) != (window is None):
             raise ValueError("source and window must be passed together")
@@ -311,7 +321,7 @@ class Scheduler:
             pool = InlinePool()
         try:
             return self._event_loop(dag, runner, completed, on_result, pool,
-                                    source, window, keep_results)
+                                    source, window, keep_results, classify)
         finally:
             if own_pool:
                 pool.shutdown()
@@ -327,6 +337,7 @@ class Scheduler:
         source: Any = None,
         window: int | None = None,
         keep_results: bool = True,
+        classify: Callable[[TaskNode, Any], str | None] | None = None,
     ) -> dict[str, TaskResult]:
         streaming = source is not None
         succ = dag.successors()
@@ -534,6 +545,13 @@ class Scheduler:
                          f"budget {d.budget}s")
             if error is None:
                 error = self._classify(node, value)
+            if error is None and classify is not None:
+                # user-level classifier (e.g. required-capture checks):
+                # a crash in it fails the attempt, not the study
+                try:
+                    error = classify(node, value)
+                except Exception as e:  # noqa: BLE001 — fault isolation
+                    error = f"classification error: {type(e).__name__}: {e}"
             if error is not None and d.speculative:
                 # failed duplicate: the primary still runs — make it a
                 # straggler candidate again (its heap entry was consumed

@@ -42,6 +42,7 @@ from .executors import (
 )
 from .paramspace import ParameterSpace, combo_id, from_task
 from .provenance import StudyDB
+from .results import build_capture_sets
 from .scheduler import Scheduler, TaskResult
 from .state import StudyJournal
 from .wdl import StudySpec, TaskSpec, parse_file
@@ -119,6 +120,8 @@ class ParameterStudy:
         self.flush_interval = flush_interval
         self.db = StudyDB(root, self.name)
         self.journal = StudyJournal(self.db.dir / "journal.json")
+        #: task → compiled ``capture:`` extractors (results subsystem)
+        self.captures = build_capture_sets(spec)
 
     # -- expansion --------------------------------------------------------
     def space(self) -> ParameterSpace:
@@ -280,7 +283,11 @@ class ParameterStudy:
         if isinstance(pool, WorkerPool):
             return pool, False
         if pool == "lane":
-            return make_pool("lane", slots, render=self.render_node), True
+            # a capture sourcing stderr needs the spool routed back even
+            # on success (lanes otherwise read stderr only on failure)
+            wants_stderr = any(cs.uses_stderr for cs in self.captures.values())
+            return make_pool("lane", slots, render=self.render_node,
+                             capture_stderr=wants_stderr), True
         if pool in ("ssh", "slurm", "pbs", "batch"):
             d = self._remote_spec_defaults()
             kind = pool if pool != "batch" else (d["batch"] or "slurm")
@@ -293,6 +300,51 @@ class ParameterStudy:
                 submitter=submitter,
                 spool_root=self.db.dir / "batch"), True
         return make_pool(pool, slots), True
+
+    # -- results capture ------------------------------------------------
+    def _capture_state(self, aggregator: Any) -> tuple[
+            Callable[[TaskNode, Any], str | None] | None,
+            Callable[[TaskNode, TaskResult], dict[str, Any] | None] | None]:
+        """Per-run capture machinery: ``(classify, finish)``.
+
+        ``classify`` runs the text extractors against a completed
+        attempt's value and fails the attempt when a *required* metric
+        is missing (scheduler seam — retries and failure closure apply
+        like any task failure); extracted metrics are cached so the
+        final resolution never re-extracts.  ``finish`` folds in the
+        engine-measured builtins, attaches the metrics to the
+        ``TaskResult``, and feeds the streaming aggregator.  Both are
+        ``None`` when the study declares no captures (and no aggregator
+        rides along) — the hot path pays nothing.
+        """
+        if not self.captures and aggregator is None:
+            return None, None
+        cache: dict[str, dict[str, Any]] = {}
+
+        def classify(node: TaskNode, value: Any) -> str | None:
+            cs = self.captures.get(node.task)
+            if cs is None:
+                return None
+            metrics, missing = cs.extract(value, combo=node.combo)
+            cache[node.id] = metrics
+            if missing:
+                plural = "s" if len(missing) > 1 else ""
+                return (f"missing required metric{plural}: "
+                        f"{', '.join(sorted(missing))}")
+            return None
+
+        def finish(node: TaskNode, res: TaskResult
+                   ) -> dict[str, Any] | None:
+            cs = self.captures.get(node.task)
+            metrics = None
+            if cs is not None:
+                metrics = cs.finalize(cache.pop(res.id, None), res)
+                res.metrics = metrics
+            if aggregator is not None and res.status == "ok":
+                aggregator.add(node.combo, metrics or {})
+            return metrics
+
+        return (classify if self.captures else None), finish
 
     @staticmethod
     def _ids_from_indices(space: ParameterSpace,
@@ -365,6 +417,7 @@ class ParameterStudy:
         window: int | None = None,
         on_result: Callable[[TaskResult], None] | None = None,
         keep_results: bool = True,
+        aggregator: Any = None,
     ) -> dict[str, TaskResult]:
         """Execute the study through the unified event engine.
 
@@ -402,6 +455,16 @@ class ParameterStudy:
         group-committed for the duration of the run (see
         ``flush_count``/``flush_interval`` on the constructor) and are
         always flushed before this method returns or raises.
+
+        When tasks declare ``capture:`` metrics, every attempt is
+        extracted once: a missing *required* metric classifies the
+        attempt as failed (retried, then failure-closed, like a nonzero
+        exit), the final metrics ride ``TaskResult.metrics`` and the
+        provenance record (``metrics=…``), and ``aggregator`` (a
+        ``ResultsAggregator``) is fed each ``ok`` resolution's
+        ``(combo, metrics)`` — with ``keep_results=False`` a streaming
+        run aggregates in O(groups) memory with no result accumulation
+        anywhere.
         """
         if window is not None:
             return self._run_windowed(
@@ -409,7 +472,8 @@ class ParameterStudy:
                 gang=gang, max_retries=max_retries, pool=pool,
                 speculate=speculate, hosts=hosts, ppnode=ppnode,
                 nnodes=nnodes, transport=transport, submitter=submitter,
-                on_result=on_result, keep_results=keep_results)
+                on_result=on_result, keep_results=keep_results,
+                aggregator=aggregator)
         instances = self.instances()
         completed: set[str] = set()
         if resume and self.journal.exists():
@@ -447,12 +511,14 @@ class ParameterStudy:
         # stay in the per-attempt records, never the journal host map
         # (which must stay O(remote tasks), not O(N_W))
         keep_hosts = getattr(worker, "durable_hosts", True)
+        capture_classify, capture_finish = self._capture_state(aggregator)
 
         def _on_result(res: TaskResult) -> None:
             node = dag.nodes[res.id]
+            metrics = capture_finish(node, res) if capture_finish else None
             self.db.record(res.id, res.status, res.runtime, combo=node.combo,
                            error=res.error, attempts=res.attempts,
-                           slot=res.slot, host=res.host)
+                           slot=res.slot, host=res.host, metrics=metrics)
             if res.status == "ok":
                 completed.add(res.id)
                 host = res.host if keep_hosts else None
@@ -477,7 +543,8 @@ class ParameterStudy:
                                          self.flush_interval):
                 results = sched.execute(dag, run_fn, completed=completed,
                                         on_result=_on_result, pool=worker,
-                                        keep_results=keep_results)
+                                        keep_results=keep_results,
+                                        classify=capture_classify)
         finally:
             if owned:
                 worker.shutdown()
@@ -507,6 +574,7 @@ class ParameterStudy:
         submitter: Any,
         on_result: Callable[[TaskResult], None] | None = None,
         keep_results: bool = True,
+        aggregator: Any = None,
     ) -> dict[str, TaskResult]:
         """Streaming execution: windowed admission + journal v2."""
         space = self.space()
@@ -558,15 +626,18 @@ class ParameterStudy:
         # see the eager path: transient lane labels never enter the
         # journal host map — streaming journals stay O(completed ranges)
         keep_hosts = getattr(worker, "durable_hosts", True)
+        capture_classify, capture_finish = self._capture_state(aggregator)
 
         def _on_result(res: TaskResult) -> None:
             # fires before the scheduler retires the node, so the lookup
             # below sees the live TaskNode
             node = dag.nodes[res.id]
             idx = node.payload.get("index")
+            metrics = capture_finish(node, res) if capture_finish else None
             self.db.record(res.id, res.status, res.runtime, combo=node.combo,
                            error=res.error, attempts=res.attempts,
-                           slot=res.slot, host=res.host, index=idx)
+                           slot=res.slot, host=res.host, index=idx,
+                           metrics=metrics)
             if res.status == "ok":
                 host = res.host if keep_hosts else None
                 if host:
@@ -590,7 +661,8 @@ class ParameterStudy:
                 results = sched.execute(dag, run_fn, on_result=_on_result,
                                         pool=worker, source=source,
                                         window=window,
-                                        keep_results=keep_results)
+                                        keep_results=keep_results,
+                                        classify=capture_classify)
         finally:
             if owned:
                 worker.shutdown()

@@ -20,19 +20,26 @@ _STATE_COLOR = {
 }
 
 
+def _esc(s: str) -> str:
+    """Escape a string for a double-quoted DOT id or label: backslashes
+    first, then quotes — a task named ``a"b`` or ``a\\b`` must not break
+    out of (or corrupt) the quoted token."""
+    return str(s).replace("\\", "\\\\").replace('"', '\\"')
+
+
 def to_dot(dag: TaskDAG, states: Mapping[str, str] | None = None,
            title: str = "papas_study") -> str:
     states = states or {}
-    lines = [f'digraph "{title}" {{', "  rankdir=LR;",
+    lines = [f'digraph "{_esc(title)}" {{', "  rankdir=LR;",
              '  node [shape=box, style=filled, fillcolor=white];']
     for nid, node in sorted(dag.nodes.items()):
         state = states.get(nid, "pending")
         color = _STATE_COLOR.get(state, "white")
-        label = f"{node.task}\\n{nid}"
-        lines.append(f'  "{nid}" [label="{label}", fillcolor={color}];')
+        label = f"{_esc(node.task)}\\n{_esc(nid)}"
+        lines.append(f'  "{_esc(nid)}" [label="{label}", fillcolor={color}];')
     for nid, node in sorted(dag.nodes.items()):
         for dep in node.deps:
-            lines.append(f'  "{dep}" -> "{nid}";')
+            lines.append(f'  "{_esc(dep)}" -> "{_esc(nid)}";')
     lines.append("}")
     return "\n".join(lines)
 

@@ -15,11 +15,19 @@ Implements the keyword-value WDL of Ponce et al. (PEARC'18) §5:
 
 Reserved keywords (paper §5): command, name, environ, after, infiles,
 outfiles, substitute, parallel, batch, nnodes, ppnode, hosts, fixed,
-sampling — plus two framework extensions: ``timeout`` (per-attempt
-wall-clock bound enforced by the scheduler) and ``allow_nonzero``
-(nonzero shell exits are data, not failures).  Anything else is a
-user-defined keyword usable in interpolations (e.g. ``args`` in the
-paper's Fig. 5).
+sampling — plus four framework extensions: ``timeout`` (per-attempt
+wall-clock bound enforced by the scheduler), ``allow_nonzero``
+(nonzero shell exits are data, not failures), ``capture`` (declarative
+metric extraction — a mapping of metric names to extractors over task
+output: a regex string, or a mapping with exactly one of
+``regex:``/``json:``/``csv:``/``builtin:`` plus optional ``source:``
+(stdout | stderr | outfile:<name> | file:<path template>),
+``required:``, ``type:``, and ``group:``; builtins are ``rc``,
+``duration``, ``host``, ``slot`` — see ``repro.core.results``), and
+``baseline`` (the reference parameter point for derived
+speedup/efficiency metrics, e.g. ``baseline: {threads: 1}``).  Anything
+else is a user-defined keyword usable in interpolations (e.g. ``args``
+in the paper's Fig. 5).
 """
 from __future__ import annotations
 
@@ -51,6 +59,8 @@ RESERVED_KEYWORDS = frozenset(
         "sampling",
         "timeout",
         "allow_nonzero",
+        "capture",
+        "baseline",
     }
 )
 
@@ -178,6 +188,10 @@ class TaskSpec:
     sampling: dict[str, Any] | None = None
     timeout: float | None = None
     allow_nonzero: bool = False
+    #: metric name → CaptureSpec (declarative result extraction)
+    capture: dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: reference parameter point for speedup/efficiency derivation
+    baseline: dict[str, Any] = dataclasses.field(default_factory=dict)
     #: user-defined keywords → {subkey: [values]} or {None: [values]}
     user: dict[str, dict[str | None, list[Any]]] = dataclasses.field(
         default_factory=dict
@@ -213,6 +227,14 @@ class StudySpec:
             for dep in t.after:
                 if dep not in names:
                     raise WDLError(f"task {t.task!r}: unknown dependency {dep!r}")
+            for mname, cap in t.capture.items():
+                source = getattr(cap, "source", "stdout")
+                if source.startswith("outfile:") \
+                        and source[len("outfile:"):] not in t.outfiles:
+                    raise WDLError(
+                        f"task {t.task!r}: capture {mname!r} reads "
+                        f"{source!r} but the task declares no such "
+                        f"outfile (declared: {sorted(t.outfiles) or 'none'})")
             for group in t.fixed:
                 params = t.parameters()
                 lens = []
@@ -286,6 +308,26 @@ def _parse_task(name: str, body: Mapping[str, Any]) -> TaskSpec:
             spec.allow_nonzero = (
                 val if isinstance(val, bool)
                 else str(val).strip().lower() in ("1", "true", "yes", "on"))
+        elif kw == "capture":
+            from .results import CaptureError, parse_captures
+
+            try:
+                spec.capture = parse_captures(name, val)
+            except CaptureError as e:
+                raise WDLError(str(e)) from e
+        elif kw == "baseline":
+            if not isinstance(val, Mapping):
+                raise WDLError(
+                    f"task {name!r}: baseline must be a mapping of "
+                    f"parameter (or captured metric) to reference value")
+            spec.baseline = {}
+            for k, v in val.items():
+                iv = infer_value(v)
+                if isinstance(iv, list):
+                    raise WDLError(
+                        f"task {name!r}: baseline value for {k!r} must be "
+                        f"a scalar, got {v!r}")
+                spec.baseline[str(k)] = iv
         elif kw == "sampling":
             if isinstance(val, str):
                 spec.sampling = {"method": val}

@@ -1,0 +1,272 @@
+"""Performance-study reports over captured metrics (paper §6).
+
+Renders pivot tables from a parameter study's captured metrics — either
+a live ``ResultsAggregator`` fed by a running study, or offline from a
+finished study's ``records.jsonl`` (the group-commit provenance stream),
+so the table a streaming run printed is reproducible later without
+re-running anything:
+
+    PYTHONPATH=src python -m repro.launch.report .papas/mystudy \\
+        --group-by size,threads --metric time \\
+        --report speedup --baseline threads=1
+
+Three report shapes, each printable as Markdown (default), CSV, or JSON:
+
+* ``summary`` — one row per group: count/mean/std/min/max/median of a
+  metric (Welford + dual-heap median, the aggregator's O(groups) state).
+* ``table``  — a pivot of one statistic: the last ``--group-by`` axis
+  spreads across columns, earlier axes label the rows.
+* ``speedup`` — the paper's Fig. 6/7 derivation: speedup and parallel
+  efficiency of a timing metric relative to the declared baseline point
+  (``--baseline threads=1``; ``repro.launch.sweep --report`` defaults it
+  from the WDL ``baseline:`` keyword), pivoted the same way.
+
+Group-by keys name parameters (short forms resolve like WDL
+interpolation: ``size`` matches ``args:size``) or captured metrics
+(``threads`` matches a ``capture: threads:`` extraction).  Offline
+aggregation streams the records file and keeps the *latest* ``ok``
+record per task id, so resumed or retried studies count each instance
+exactly once.  This module deliberately avoids jax and the training
+stack — reports run anywhere the provenance files do.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import io
+import json
+import sys
+from pathlib import Path
+from typing import Any, Iterable, Iterator, Mapping, Sequence
+
+from repro.core.results import (
+    STATS, KeyResolutionError, ResultsAggregator, infer_scalar,
+)
+
+REPORTS = ("summary", "table", "speedup")
+FORMATS = ("md", "csv", "json")
+
+
+# ---------------------------------------------------------------------------
+# Offline loading
+# ---------------------------------------------------------------------------
+
+
+def records_path(path: "str | Path") -> Path:
+    """Resolve a records file: accepts the ``records.jsonl`` itself or a
+    study directory containing one."""
+    p = Path(path)
+    if p.is_dir():
+        p = p / "records.jsonl"
+    if not p.exists():
+        raise FileNotFoundError(
+            f"no provenance records at {p} (pass a study directory or a "
+            f"records.jsonl path)")
+    return p
+
+
+def iter_records(path: "str | Path") -> Iterator[dict[str, Any]]:
+    """Stream provenance records from disk, skipping blank lines."""
+    with records_path(path).open() as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                yield json.loads(line)
+
+
+def aggregate_records(
+    path: "str | Path",
+    group_by: Sequence[str],
+    metrics: Sequence[str] | None = None,
+) -> ResultsAggregator:
+    """Offline aggregation: fold a finished study's records into a fresh
+    aggregator (latest ``ok`` record per task wins)."""
+    agg = ResultsAggregator(group_by, metrics=metrics)
+    agg.add_records(iter_records(path))
+    return agg
+
+
+def parse_baseline(text: str) -> dict[str, Any]:
+    """Parse a ``key=value`` baseline declaration (value type-inferred,
+    matching WDL scalars)."""
+    key, sep, val = text.partition("=")
+    if not sep or not key.strip():
+        raise ValueError(
+            f"baseline must be key=value (e.g. threads=1), got {text!r}")
+    return {key.strip(): infer_scalar(val.strip())}
+
+
+# ---------------------------------------------------------------------------
+# Pivoting + rendering
+# ---------------------------------------------------------------------------
+
+
+def _fmt_cell(v: Any) -> str:
+    if v is None:
+        return ""
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def render_rows(headers: Sequence[str], rows: Iterable[Sequence[Any]],
+                fmt: str = "md") -> str:
+    """Render one table in the requested format.  JSON emits a list of
+    header-keyed objects (raw values, not formatted strings)."""
+    rows = [list(r) for r in rows]
+    if fmt == "json":
+        return json.dumps([dict(zip(headers, r)) for r in rows], indent=2,
+                          default=str)
+    if fmt == "csv":
+        buf = io.StringIO()
+        w = csv.writer(buf, lineterminator="\n")
+        w.writerow(headers)
+        for r in rows:
+            w.writerow([_fmt_cell(v) for v in r])
+        return buf.getvalue().rstrip("\n")
+    if fmt != "md":
+        raise ValueError(f"unknown format {fmt!r} (valid: {FORMATS})")
+    cells = [[_fmt_cell(v) for v in r] for r in rows]
+    widths = [max(len(str(h)), *(len(r[i]) for r in cells), 1)
+              if cells else len(str(h))
+              for i, h in enumerate(headers)]
+    def line(vals: Sequence[str]) -> str:
+        return "| " + " | ".join(str(v).ljust(w)
+                                 for v, w in zip(vals, widths)) + " |"
+    out = [line([str(h) for h in headers]),
+           "|" + "|".join("-" * (w + 2) for w in widths) + "|"]
+    out += [line(r) for r in cells]
+    return "\n".join(out)
+
+
+def _sorted_keys(keys: Iterable[tuple]) -> list[tuple]:
+    def k(t: tuple) -> tuple:
+        return tuple((0, v) if isinstance(v, (int, float))
+                     and not isinstance(v, bool) else (1, str(v))
+                     for v in t)
+    return sorted(keys, key=k)
+
+
+def pivot_rows(entries: Mapping[tuple, Any], group_by: Sequence[str]
+               ) -> tuple[list[str], list[list[Any]]]:
+    """Pivot group-keyed cells: the last group-by axis spreads across
+    columns, earlier axes label the rows.  A single axis degenerates to
+    one row per value."""
+    group_by = list(group_by)
+    if len(group_by) == 1:
+        headers = [group_by[0], "value"]
+        rows = [[key[0], entries[key]] for key in _sorted_keys(entries)]
+        return headers, rows
+    col_axis = group_by[-1]
+    col_vals = _sorted_keys({(key[-1],) for key in entries})
+    cols = [c[0] for c in col_vals]
+    by_row: dict[tuple, dict[Any, Any]] = {}
+    for key, val in entries.items():
+        by_row.setdefault(key[:-1], {})[key[-1]] = val
+    headers = group_by[:-1] + [f"{col_axis}={c}" for c in cols]
+    rows = [list(rkey) + [by_row[rkey].get(c) for c in cols]
+            for rkey in _sorted_keys(by_row)]
+    return headers, rows
+
+
+def summary_report(agg: ResultsAggregator, metric: str,
+                   fmt: str = "md") -> str:
+    headers = list(agg.group_by) + list(STATS)
+    rows = [list(key) + [stats.get(s) for s in STATS]
+            for key, stats in agg.summary(metric).items()]
+    return render_rows(headers, rows, fmt)
+
+
+def table_report(agg: ResultsAggregator, metric: str, stat: str = "mean",
+                 fmt: str = "md") -> str:
+    headers, rows = pivot_rows(agg.table(metric, stat), agg.group_by)
+    return render_rows(headers, rows, fmt)
+
+
+def speedup_report(agg: ResultsAggregator, metric: str,
+                   baseline: Mapping[str, Any], stat: str = "mean",
+                   fmt: str = "md") -> str:
+    """Speedup + parallel efficiency pivots relative to ``baseline``
+    (the paper's Fig. 6/7 tables)."""
+    derived = agg.speedup(metric, baseline, stat)
+    if fmt == "json":
+        return json.dumps(
+            [dict(zip(agg.group_by, key), **vals)
+             for key, vals in sorted(derived.items(),
+                                     key=lambda kv: str(kv[0]))],
+            indent=2, default=str)
+    (bkey, bval), = baseline.items()
+    sections = []
+    for field in ("speedup", "efficiency"):
+        entries = {key: vals[field] for key, vals in derived.items()}
+        headers, rows = pivot_rows(entries, agg.group_by)
+        title = (f"{field} of {stat}({metric}), "
+                 f"baseline {bkey}={bval}")
+        body = render_rows(headers, rows, fmt)
+        sections.append(f"# {title}\n{body}")
+    return "\n\n".join(sections)
+
+
+def run_report(agg: ResultsAggregator, report: str, metric: str,
+               stat: str = "mean",
+               baseline: Mapping[str, Any] | None = None,
+               fmt: str = "md") -> str:
+    """Dispatch one report by name (shared by this CLI and
+    ``repro.launch.sweep --report``)."""
+    if report == "summary":
+        return summary_report(agg, metric, fmt)
+    if report == "table":
+        return table_report(agg, metric, stat, fmt)
+    if report == "speedup":
+        if not baseline:
+            raise ValueError(
+                "speedup report needs a baseline (--baseline key=value, "
+                "or a WDL 'baseline:' declaration when run via sweep)")
+        return speedup_report(agg, metric, baseline, stat, fmt)
+    raise ValueError(f"unknown report {report!r} (valid: {REPORTS})")
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Render pivot tables from a study's captured metrics "
+                    "(records.jsonl)")
+    ap.add_argument("path",
+                    help="study directory or records.jsonl path")
+    ap.add_argument("--group-by", required=True,
+                    help="comma-separated group keys (parameters or "
+                         "captured metrics; short names resolve like WDL "
+                         "interpolation)")
+    ap.add_argument("--report", choices=REPORTS, default="summary")
+    ap.add_argument("--metric", default="time",
+                    help="captured metric to aggregate (default: time)")
+    ap.add_argument("--stat", choices=[s for s in STATS if s != "count"],
+                    default="mean",
+                    help="statistic for table/speedup cells")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline point for --report speedup, as "
+                         "key=value (e.g. threads=1)")
+    ap.add_argument("--format", choices=FORMATS, default="md")
+    args = ap.parse_args(argv)
+
+    group_by = [k.strip() for k in args.group_by.split(",") if k.strip()]
+    try:
+        agg = aggregate_records(args.path, group_by)
+        baseline = parse_baseline(args.baseline) if args.baseline else None
+        out = run_report(agg, args.report, args.metric, args.stat,
+                         baseline, args.format)
+    except (FileNotFoundError, KeyResolutionError, ValueError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    if agg.n_grouped == 0:
+        detail = "; ".join(agg.key_errors.values())
+        print("error: no records matched the group-by keys "
+              f"{group_by} (saw {agg.n_results} ok records"
+              + (f"; {detail}" if detail else "") + ")",
+              file=sys.stderr)
+        return 2
+    print(out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,11 +27,22 @@ per-"host" accounting preserved) — pass ``--transport ssh`` /
 are addressed by space index, at most ``slots + N`` task nodes stay
 live, and checkpoints use the compact v2 journal — constant startup time
 and bounded memory for arbitrarily large parameter spaces.
+
+``--report {summary,table,speedup} --group-by size,threads`` turns the
+run into a performance study (paper §6): tasks' ``capture:`` metrics
+stream through a ``ResultsAggregator`` as completions arrive (the run
+switches to ``keep_results=False`` — O(groups) memory however large the
+sweep) and the chosen pivot table prints at the end.  ``--baseline
+threads=1`` (default: the WDL ``baseline:`` keyword) anchors the
+speedup/efficiency derivation; ``--metric``/``--stat``/``--format``
+pick what fills the cells.  The same table is reproducible offline from
+``records.jsonl`` via ``python -m repro.launch.report``.
 """
 from __future__ import annotations
 
 import argparse
 import shlex
+import sys
 from pathlib import Path
 from typing import Any
 
@@ -39,9 +50,10 @@ import jax
 
 from repro.configs import get_smoke
 from repro.core import (
-    GangExecutor, LocalSubmitter, LocalTransport, SchedulerSubmitter,
-    SSHTransport, load_study, stackable_key,
+    GangExecutor, LocalSubmitter, LocalTransport, ResultsAggregator,
+    SchedulerSubmitter, SSHTransport, load_study, stackable_key,
 )
+from repro.launch import report as report_mod
 from repro.train.ensemble import train_ensemble
 
 
@@ -88,10 +100,39 @@ def main() -> None:
                          "task nodes live, address instances by index "
                          "instead of materializing the space, and journal "
                          "in compact v2 form (default: eager whole-DAG)")
+    ap.add_argument("--report", choices=report_mod.REPORTS, default=None,
+                    help="aggregate captured metrics while the study "
+                         "streams and print this pivot table at the end "
+                         "(requires --group-by; implies keep_results=False "
+                         "— O(groups) memory)")
+    ap.add_argument("--group-by", default=None,
+                    help="comma-separated group keys for --report: "
+                         "parameters or captured metrics (short names "
+                         "resolve like WDL interpolation)")
+    ap.add_argument("--baseline", default=None,
+                    help="speedup baseline as key=value (default: the "
+                         "WDL 'baseline:' keyword)")
+    ap.add_argument("--metric", default="time",
+                    help="captured metric the report aggregates "
+                         "(default: time)")
+    ap.add_argument("--stat", default="mean",
+                    choices=[s for s in report_mod.STATS if s != "count"],
+                    help="statistic for table/speedup cells")
+    ap.add_argument("--format", choices=report_mod.FORMATS, default="md",
+                    dest="report_format", help="report output format")
     ap.add_argument("--root", default=".papas")
     args = ap.parse_args()
 
     study = load_study(*[Path(p) for p in args.paramfile], root=args.root)
+
+    aggregator = None
+    if args.report is not None:
+        if not args.group_by:
+            ap.error("--report requires --group-by")
+        aggregator = ResultsAggregator(
+            [k.strip() for k in args.group_by.split(",") if k.strip()])
+    elif args.group_by:
+        ap.error("--group-by only makes sense with --report")
 
     # registry: any task whose command begins with "train" runs in-process
     registry = {}
@@ -105,13 +146,28 @@ def main() -> None:
                 lambda combo, _d=defaults: _train_combo(combo, _d))
     study.registry.update(registry)
 
+    counts = {"ok": 0, "total": 0}
+    extra_kwargs: dict = {}
+    if aggregator is not None:
+        if args.resume:
+            # metrics recorded before the resume never re-stream —
+            # seed the aggregator from the surviving records
+            aggregator.add_records(study.db.records())
+
+        def _count(res) -> None:
+            counts["total"] += 1
+            if res.status == "ok":
+                counts["ok"] += 1
+        extra_kwargs = dict(aggregator=aggregator, on_result=_count,
+                            keep_results=False)
+
     if args.gang:
         def gang_runner(nodes):
             members = [dict(n.combo) for n in nodes]
             return train_ensemble(members)
         gang = GangExecutor(stackable_key, gang_runner)
         results = study.run(gang=gang, resume=args.resume,
-                            window=args.window)
+                            window=args.window, **extra_kwargs)
         print(f"[gang] {gang.stats.tasks} tasks in "
               f"{gang.stats.dispatches} dispatches "
               f"(batching ×{gang.stats.batching_factor:.0f})")
@@ -132,12 +188,17 @@ def main() -> None:
                                 pool=args.pool, speculate=args.speculate,
                                 hosts=hosts, ppnode=args.ppnode,
                                 nnodes=args.nnodes, transport=transport,
-                                submitter=submitter, window=args.window)
+                                submitter=submitter, window=args.window,
+                                **extra_kwargs)
         except ValueError as e:
             ap.error(str(e))    # e.g. unknown --pool kind, missing hosts
 
-    ok = sum(1 for r in results.values() if r.status == "ok")
-    print(f"{ok}/{len(results)} instances complete; "
+    if aggregator is not None:
+        ok, total = counts["ok"], counts["total"]
+    else:
+        ok = sum(1 for r in results.values() if r.status == "ok")
+        total = len(results)
+    print(f"{ok}/{total} instances complete; "
           f"provenance in {study.db.dir}")
     stats = getattr(study, "last_run_stats", None)
     if args.window is not None and stats:
@@ -146,10 +207,41 @@ def main() -> None:
               f"({stats['skipped_complete']} already complete), "
               f"peak live nodes {stats['peak_live_nodes']} "
               f"(bound {stats['slots']} slots + {stats['window']} window)")
+    if aggregator is not None:
+        for key, err in aggregator.key_errors.items():
+            print(f"warning: group-by key {key!r}: {err}",
+                  file=sys.stderr)
+        try:
+            if aggregator.n_grouped == 0:
+                raise ValueError(
+                    f"no results matched the group-by keys "
+                    f"{aggregator.group_by}")
+            baseline = (report_mod.parse_baseline(args.baseline)
+                        if args.baseline else _wdl_baseline(study.spec))
+            print(report_mod.run_report(
+                aggregator, args.report, args.metric, args.stat,
+                baseline, args.report_format))
+        except (KeyError, ValueError) as e:
+            ap.error(str(e))    # e.g. missing baseline, bad group key
+        return
+
     for rid, res in sorted(results.items()):
         val = res.value if res.value is not None else ""
         where = f" @{res.host}" if res.host else ""
         print(f"  {rid}: {res.status} ({res.runtime:.2f}s){where} {val}")
+
+
+def _wdl_baseline(spec) -> dict | None:
+    """The study-declared baseline point, merged across tasks (two tasks
+    declaring different values for the same key is a spec error)."""
+    out: dict = {}
+    for t in spec.tasks.values():
+        for k, v in t.baseline.items():
+            if k in out and out[k] != v:
+                raise ValueError(
+                    f"conflicting baseline for {k!r}: {out[k]!r} vs {v!r}")
+            out[k] = v
+    return out or None
 
 
 if __name__ == "__main__":

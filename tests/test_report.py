@@ -1,0 +1,169 @@
+"""Report layer: pivoting, rendering, offline records aggregation, and
+the live-vs-offline reproducibility contract."""
+import json
+
+import pytest
+
+from repro.core import ParameterStudy, ResultsAggregator, parse_yaml
+from repro.launch.report import (
+    aggregate_records, iter_records, main, parse_baseline, pivot_rows,
+    render_rows, run_report, speedup_report, summary_report, table_report,
+)
+
+
+def _agg() -> ResultsAggregator:
+    agg = ResultsAggregator(["size", "threads"])
+    for size in (16, 32):
+        for p in (1, 2, 4):
+            for rep in range(2):
+                agg.add({"args:size": size},
+                        {"threads": p, "time": size / p + rep * 0.0})
+    return agg
+
+
+class TestRendering:
+    def test_markdown_shape(self):
+        out = render_rows(["a", "b"], [[1, 2.5], ["x", None]], "md")
+        lines = out.splitlines()
+        assert lines[0].startswith("| a") and "| b" in lines[0]
+        assert set(lines[1]) <= {"|", "-"}
+        assert "| 2.5" in lines[2] and lines[3].count("|") == 3
+
+    def test_csv_and_json(self):
+        out = render_rows(["a", "b"], [[1, None]], "csv")
+        assert out == "a,b\n1,"
+        doc = json.loads(render_rows(["a", "b"], [[1, None]], "json"))
+        assert doc == [{"a": 1, "b": None}]
+
+    def test_unknown_format(self):
+        with pytest.raises(ValueError, match="unknown format"):
+            render_rows(["a"], [], "xml")
+
+    def test_pivot_two_axes(self):
+        entries = {(16, 1): 1.0, (16, 2): 0.5, (32, 1): 2.0}
+        headers, rows = pivot_rows(entries, ["size", "threads"])
+        assert headers == ["size", "threads=1", "threads=2"]
+        assert rows == [[16, 1.0, 0.5], [32, 2.0, None]]
+
+    def test_pivot_single_axis(self):
+        headers, rows = pivot_rows({(2,): 0.5, (1,): 1.0}, ["threads"])
+        assert headers == ["threads", "value"]
+        assert rows == [[1, 1.0], [2, 0.5]]
+
+
+class TestReports:
+    def test_summary_contains_all_stats(self):
+        out = summary_report(_agg(), "time")
+        assert "count" in out and "median" in out
+        assert "| 16" in out
+
+    def test_table_pivots_mean(self):
+        out = table_report(_agg(), "time", "mean")
+        assert "threads=4" in out
+        # size=32, threads=4 → 8
+        row = [l for l in out.splitlines() if l.startswith("| 32")][0]
+        assert "| 8" in row
+
+    def test_speedup_report_values(self):
+        out = speedup_report(_agg(), "time", {"threads": 1})
+        assert "# speedup of mean(time), baseline threads=1" in out
+        assert "# efficiency of mean(time), baseline threads=1" in out
+        doc = json.loads(speedup_report(_agg(), "time", {"threads": 1},
+                                        fmt="json"))
+        by_key = {(d["size"], d["threads"]): d for d in doc}
+        assert by_key[(16, 4)]["speedup"] == pytest.approx(4.0)
+        assert by_key[(16, 4)]["efficiency"] == pytest.approx(1.0)
+
+    def test_run_report_dispatch_and_errors(self):
+        agg = _agg()
+        assert "count" in run_report(agg, "summary", "time")
+        with pytest.raises(ValueError, match="baseline"):
+            run_report(agg, "speedup", "time")
+        with pytest.raises(ValueError, match="unknown report"):
+            run_report(agg, "nope", "time")
+
+    def test_parse_baseline(self):
+        assert parse_baseline("threads=1") == {"threads": 1}
+        assert parse_baseline("mode=fast") == {"mode": "fast"}
+        with pytest.raises(ValueError):
+            parse_baseline("threads")
+
+
+WDL = """
+t:
+  x: ["1:4"]
+  command: noop
+  capture:
+    v: "v=([0-9]+)"
+"""
+
+
+def _finished_study(tmp_path, name="rep"):
+    study = ParameterStudy(parse_yaml(WDL), root=tmp_path, name=name)
+    study.registry.update({"t": lambda combo: f"v={combo['x']}"})
+    return study
+
+
+class TestOfflineRecords:
+    def test_offline_reproduces_live(self, tmp_path):
+        study = _finished_study(tmp_path)
+        live = ResultsAggregator(["x"])
+        study.run(aggregator=live, keep_results=False)
+        offline = aggregate_records(study.db.dir, ["x"])
+        assert offline.n_grouped == live.n_grouped == 4
+        assert table_report(offline, "v") == table_report(live, "v")
+
+    def test_latest_ok_record_wins(self, tmp_path):
+        study = _finished_study(tmp_path)
+        study.run()
+        # a re-run without resume appends duplicate ok records; the
+        # offline reader must count each instance once, latest wins
+        study2 = _finished_study(tmp_path)
+        study2.registry.update({"t": lambda combo: f"v={combo['x'] + 10}"})
+        study2.run()
+        agg = aggregate_records(study2.db.dir, ["x"])
+        assert agg.n_grouped == 4
+        assert sorted(k for (k,) in agg.groups) == [1, 2, 3, 4]
+        assert agg.groups[(1,)]["v"].mean == 11
+
+    def test_records_path_accepts_dir_and_file(self, tmp_path):
+        study = _finished_study(tmp_path)
+        study.run()
+        via_dir = list(iter_records(study.db.dir))
+        via_file = list(iter_records(study.db.dir / "records.jsonl"))
+        assert via_dir == via_file and len(via_dir) == 4
+
+    def test_missing_records_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            aggregate_records(tmp_path, ["x"])
+
+
+class TestCLI:
+    def test_main_ok(self, tmp_path, capsys):
+        study = _finished_study(tmp_path)
+        study.run()
+        rc = main([str(study.db.dir), "--group-by", "x",
+                   "--metric", "v", "--report", "table"])
+        out = capsys.readouterr().out
+        assert rc == 0 and "| x" in out
+
+    def test_main_speedup_needs_baseline(self, tmp_path, capsys):
+        study = _finished_study(tmp_path)
+        study.run()
+        rc = main([str(study.db.dir), "--group-by", "x",
+                   "--metric", "v", "--report", "speedup"])
+        assert rc == 2
+        assert "baseline" in capsys.readouterr().err
+
+    def test_main_bad_path(self, tmp_path, capsys):
+        rc = main([str(tmp_path / "nope"), "--group-by", "x"])
+        assert rc == 2
+        assert "error" in capsys.readouterr().err
+
+    def test_main_unmatched_group_key(self, tmp_path, capsys):
+        study = _finished_study(tmp_path)
+        study.run()
+        rc = main([str(study.db.dir), "--group-by", "nothere",
+                   "--metric", "v"])
+        assert rc == 2
+        assert "no records matched" in capsys.readouterr().err

@@ -1,0 +1,528 @@
+"""Results subsystem: capture grammar, extraction, classification,
+streaming aggregation, and resume semantics for captured metrics."""
+import json
+import math
+import statistics
+
+import pytest
+
+from repro.core import ParameterStudy, ResultsAggregator, parse_yaml
+from repro.core.executors import ShellResult
+from repro.core.results import (
+    BUILTIN_CAPTURES, CaptureError, CaptureSet, KeyResolutionError,
+    MetricStats, infer_scalar, parse_capture, parse_captures, resolve_key,
+)
+from repro.core.wdl import RESERVED_KEYWORDS, WDLError
+
+
+def _study(wdl: str, tmp_path, name="s", **kwargs) -> ParameterStudy:
+    return ParameterStudy(parse_yaml(wdl), root=tmp_path, name=name,
+                          **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Capture grammar
+# ---------------------------------------------------------------------------
+
+
+class TestCaptureGrammar:
+    def test_reserved_keywords(self):
+        assert "capture" in RESERVED_KEYWORDS
+        assert "baseline" in RESERVED_KEYWORDS
+
+    def test_shorthand_regex_is_optional_stdout(self):
+        spec = parse_capture("t", "m", r"v=(\d+)")
+        assert spec.kind == "regex" and spec.source == "stdout"
+        assert not spec.required
+
+    def test_shorthand_builtin(self):
+        for b in BUILTIN_CAPTURES:
+            spec = parse_capture("t", "m", b)
+            assert spec.kind == "builtin" and spec.path == b
+
+    def test_mapping_form(self):
+        spec = parse_capture("t", "m", {
+            "regex": r"t=(?P<value>\d+)", "source": "stderr",
+            "required": True, "type": "float"})
+        assert spec.source == "stderr" and spec.required
+        assert spec.cast == "float"
+
+    def test_exactly_one_kind(self):
+        with pytest.raises(CaptureError, match="exactly one"):
+            parse_capture("t", "m", {"regex": "a", "json": "b"})
+        with pytest.raises(CaptureError, match="exactly one"):
+            parse_capture("t", "m", {"required": True})
+
+    def test_bad_regex(self):
+        with pytest.raises(CaptureError, match="bad regex"):
+            parse_capture("t", "m", "([")
+
+    def test_unknown_source_type_builtin_and_keys(self):
+        with pytest.raises(CaptureError, match="unknown source"):
+            parse_capture("t", "m", {"regex": "a", "source": "nope"})
+        with pytest.raises(CaptureError, match="unknown type"):
+            parse_capture("t", "m", {"regex": "a", "type": "complex"})
+        with pytest.raises(CaptureError, match="unknown builtin"):
+            parse_capture("t", "m", {"builtin": "ram"})
+        with pytest.raises(CaptureError, match="unknown key"):
+            parse_capture("t", "m", {"regex": "a", "pattern": "b"})
+
+    def test_wdl_surfaces_capture_errors(self):
+        with pytest.raises(WDLError, match="bad regex"):
+            parse_yaml("t:\n  capture:\n    m: '(['\n")
+
+    def test_wdl_outfile_capture_validated(self):
+        with pytest.raises(WDLError, match="no such\\s+outfile"):
+            parse_yaml(
+                "t:\n  capture:\n    m:\n      regex: a\n"
+                "      source: 'outfile:res'\n")
+        spec = parse_yaml(
+            "t:\n  outfiles:\n    res: out.txt\n"
+            "  capture:\n    m:\n      regex: a\n"
+            "      source: 'outfile:res'\n")
+        assert spec.tasks["t"].capture["m"].source == "outfile:res"
+
+    def test_wdl_baseline_scalars_only(self):
+        spec = parse_yaml("t:\n  baseline:\n    threads: '1'\n")
+        assert spec.tasks["t"].baseline == {"threads": 1}
+        with pytest.raises(WDLError, match="scalar"):
+            parse_yaml("t:\n  baseline:\n    threads: '1:8'\n")
+
+    def test_infer_scalar_never_expands_ranges(self):
+        assert infer_scalar("16:32") == "16:32"
+        assert infer_scalar("42") == 42
+        assert infer_scalar("4.5") == 4.5
+        assert infer_scalar("true") is True
+
+
+# ---------------------------------------------------------------------------
+# Extraction
+# ---------------------------------------------------------------------------
+
+
+def _cs(caps: dict, outfiles=None) -> CaptureSet:
+    return CaptureSet("t", parse_captures("t", caps), outfiles)
+
+
+class TestExtraction:
+    def test_last_match_wins(self):
+        cs = _cs({"m": r"v=(\d+)"})
+        v = ShellResult(0, "v=1\nv=2\nv=3", "", 0.0)
+        assert cs.extract(v)[0] == {"m": 3}
+
+    def test_named_group_and_explicit_group(self):
+        cs = _cs({"a": r"(?P<value>\d+) of (\d+)",
+                  "b": {"regex": r"(\d+) of (\d+)", "group": 2}})
+        v = ShellResult(0, "7 of 9", "", 0.0)
+        assert cs.extract(v)[0] == {"a": 7, "b": 9}
+
+    def test_stderr_source(self):
+        cs = _cs({"m": {"regex": r"err=(\d+)", "source": "stderr"}})
+        v = ShellResult(0, "", "err=5", 0.0)
+        assert cs.extract(v)[0] == {"m": 5}
+        assert cs.uses_stderr
+
+    def test_json_path_from_text_and_value(self):
+        cs = _cs({"m": {"json": "perf.runs.1.t"}})
+        doc = {"perf": {"runs": [{"t": 1}, {"t": 2.5}]}}
+        v = ShellResult(0, json.dumps(doc), "", 0.0)
+        assert cs.extract(v)[0] == {"m": 2.5}
+        # registry tasks can return the structure directly
+        assert cs.extract(doc)[0] == {"m": 2.5}
+
+    def test_csv_column_last_row_and_positional(self):
+        text = "n,t\n1,0.5\n2,0.25\n"
+        cs = _cs({"t": {"csv": "t"}, "first": {"csv": "0"}})
+        v = ShellResult(0, text, "", 0.0)
+        assert cs.extract(v)[0] == {"t": 0.25, "first": 2}
+
+    def test_csv_header_only_is_missing(self):
+        cs = _cs({"t": {"csv": "t", "required": True},
+                  "p": {"csv": "0", "required": True}})
+        metrics, missing = cs.extract(ShellResult(0, "n,t\n", "", 0.0))
+        assert metrics == {"t": None, "p": None}
+        assert sorted(missing) == ["p", "t"]
+
+    def test_file_template_source(self, tmp_path):
+        out = tmp_path / "r_3.txt"
+        out.write_text("gflops: 12.5\n")
+        cs = _cs({"g": {"regex": r"gflops: ([\d.]+)",
+                        "source": f"file:{tmp_path}/r_${{x}}.txt"}})
+        metrics, missing = cs.extract(ShellResult(0, "", "", 0.0),
+                                      combo={"x": 3})
+        assert metrics == {"g": 12.5} and not missing
+
+    def test_outfile_template_source(self, tmp_path):
+        out = tmp_path / "res_2.txt"
+        out.write_text("t=9")
+        cs = _cs({"m": {"regex": r"t=(\d+)", "source": "outfile:res"}},
+                 outfiles={"res": f"{tmp_path}/res_${{x}}.txt"})
+        assert cs.extract(None, combo={"x": 2})[0] == {"m": 9}
+
+    def test_required_vs_optional_missing(self):
+        cs = _cs({"req": {"regex": r"a=(\d+)", "required": True},
+                  "opt": r"b=(\d+)"})
+        metrics, missing = cs.extract(ShellResult(0, "nothing", "", 0.0))
+        assert missing == ["req"]
+        assert metrics == {"req": None, "opt": None}
+
+    def test_type_inference_and_cast(self):
+        cs = _cs({"i": r"i=(\S+)", "f": r"f=(\S+)", "b": r"b=(\S+)",
+                  "s": r"s=(\S+)",
+                  "forced": {"regex": r"i=(\S+)", "type": "str"}})
+        v = ShellResult(0, "i=3 f=2.5 b=true s=abc", "", 0.0)
+        m = cs.extract(v)[0]
+        assert m == {"i": 3, "f": 2.5, "b": True, "s": "abc",
+                     "forced": "3"}
+        assert isinstance(m["i"], int) and isinstance(m["f"], float)
+
+    def test_non_shellresult_value_stringifies(self):
+        cs = _cs({"m": r"([\d.]+)"})
+        assert cs.extract(3.25)[0] == {"m": 3.25}
+
+    def test_finalize_builtins(self):
+        cs = _cs({"rc": "rc", "dur": "duration", "host": "host",
+                  "slot": "slot", "m": r"v=(\d+)"})
+
+        class R:
+            runtime, host, slot = 1.5, "h0", 3
+            value = ShellResult(2, "v=1", "", 1.5)
+        out = cs.finalize({"m": 1}, R())
+        assert out == {"rc": 2, "dur": 1.5, "host": "h0", "slot": 3,
+                       "m": 1}
+        assert list(out) == ["rc", "dur", "host", "slot", "m"]
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: classification, records, builtins
+# ---------------------------------------------------------------------------
+
+
+WDL_CAP = """
+t:
+  x: ["1:3"]
+  command: echo "v=${x}"
+  capture:
+    v:
+      regex: "v=([0-9]+)"
+      required: true
+    rc: rc
+    dur: duration
+"""
+
+
+class TestEngineIntegration:
+    def test_ok_run_records_metrics(self, tmp_path):
+        study = _study(WDL_CAP, tmp_path)
+        results = study.run()
+        assert all(r.status == "ok" for r in results.values())
+        for r in results.values():
+            assert r.metrics["rc"] == 0 and r.metrics["dur"] >= 0
+        by_v = sorted(r.metrics["v"] for r in results.values())
+        assert by_v == [1, 2, 3]
+        recs = [r for r in study.db.records() if r["status"] == "ok"]
+        assert sorted(r["metrics"]["v"] for r in recs) == [1, 2, 3]
+
+    def test_missing_required_fails_and_closes(self, tmp_path):
+        wdl = """
+a:
+  x: ["1:2"]
+  command: echo "nothing"
+  capture:
+    v:
+      regex: "v=([0-9]+)"
+      required: true
+b:
+  after: [a]
+  command: echo "done"
+"""
+        study = _study(wdl, tmp_path)
+        results = study.run(max_retries=1)
+        a = [r for rid, r in results.items() if rid.startswith("a@")]
+        b = [r for rid, r in results.items() if rid.startswith("b@")]
+        assert all(r.status == "failed" for r in a)
+        assert all("missing required metric" in r.error for r in a)
+        assert all(r.attempts == 2 for r in a), "retries must apply"
+        assert all(r.status == "skipped" for r in b), "closure must apply"
+
+    def test_missing_optional_is_null(self, tmp_path):
+        wdl = WDL_CAP.replace("required: true", "required: false")
+        study = _study(wdl.replace('echo "v=${x}"', 'echo "w=${x}"'),
+                       tmp_path)
+        results = study.run()
+        assert all(r.status == "ok" for r in results.values())
+        assert all(r.metrics["v"] is None for r in results.values())
+
+    def test_lane_pool_stderr_capture_routed(self, tmp_path):
+        wdl = """
+t:
+  x: ["1:4"]
+  command: echo "e=${x}" >&2
+  capture:
+    e:
+      regex: "e=([0-9]+)"
+      source: stderr
+      required: true
+"""
+        study = _study(wdl, tmp_path)
+        results = study.run(pool="lane", slots=2)
+        assert all(r.status == "ok" for r in results.values())
+        assert sorted(r.metrics["e"] for r in results.values()) == \
+            [1, 2, 3, 4]
+
+    def test_slot_and_host_builtins_on_lane(self, tmp_path):
+        wdl = """
+t:
+  x: ["1:4"]
+  command: "true"
+  capture:
+    where: host
+    lane_slot: slot
+"""
+        study = _study(wdl, tmp_path)
+        results = study.run(pool="lane", slots=2)
+        hosts = {r.metrics["where"] for r in results.values()}
+        assert hosts and all(h.startswith("lane") for h in hosts)
+        assert all(r.metrics["lane_slot"] >= 0 for r in results.values())
+
+    def test_batch_pool_spool_stdout_capture(self, tmp_path):
+        """Batch allocations spool per-task .out files; capture must see
+        that stdout exactly like an inline run's."""
+        from repro.core import LocalSubmitter
+
+        study = _study(WDL_CAP, tmp_path, name="batch")
+        results = study.run(pool="slurm", submitter=LocalSubmitter(),
+                            nnodes=1, ppnode=2)
+        assert all(r.status == "ok" for r in results.values())
+        assert sorted(r.metrics["v"] for r in results.values()) == [1, 2, 3]
+
+    def test_ssh_pool_stdout_capture(self, tmp_path):
+        from repro.core import LocalTransport
+
+        study = _study(WDL_CAP, tmp_path, name="ssh")
+        results = study.run(pool="ssh", hosts=["h0", "h1"],
+                            transport=LocalTransport())
+        assert all(r.status == "ok" for r in results.values())
+        assert sorted(r.metrics["v"] for r in results.values()) == [1, 2, 3]
+        # the host builtin is absent here, but TaskResult.host is real
+        assert {r.host for r in results.values()} <= {"h0", "h1"}
+
+    def test_gang_path_captures(self, tmp_path):
+        from repro.core import GangExecutor, stackable_key
+
+        study = _study(WDL_CAP.replace('echo "v=${x}"', "noop"), tmp_path)
+
+        def gang_runner(nodes):
+            return [f"v={n.combo['x']}" for n in nodes]
+        gang = GangExecutor(stackable_key, gang_runner)
+        results = study.run(gang=gang)
+        assert sorted(r.metrics["v"] for r in results.values()) == [1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# Streaming aggregation
+# ---------------------------------------------------------------------------
+
+
+class TestAggregator:
+    def test_stats_match_reference(self):
+        xs = [3.5, 1.0, 2.25, 9.0, 4.0, 4.0, 0.5]
+        ms = MetricStats()
+        for x in xs:
+            ms.add(x)
+        assert ms.n == len(xs)
+        assert ms.mean == pytest.approx(statistics.fmean(xs))
+        assert ms.std == pytest.approx(statistics.stdev(xs))
+        assert ms.min == min(xs) and ms.max == max(xs)
+        assert ms.median == sorted(xs)[len(xs) // 2]
+
+    def test_short_key_resolution(self):
+        assert resolve_key("size", ["args:size", "other"]) == "args:size"
+        assert resolve_key("size", ["t/args:size"]) == "t/args:size"
+        assert resolve_key("size", ["width", "height"]) is None
+        with pytest.raises(KeyResolutionError):
+            resolve_key("size", ["a:size", "b:size"])
+
+    def test_group_by_param_and_metric(self):
+        agg = ResultsAggregator(["size", "mode"])
+        agg.add({"args:size": 16}, {"mode": "fast", "t": 1.0})
+        agg.add({"args:size": 16}, {"mode": "slow", "t": 4.0})
+        assert set(agg.groups) == {(16, "fast"), (16, "slow")}
+
+    def test_unresolvable_key_counts_but_skips(self):
+        agg = ResultsAggregator(["nope"])
+        assert agg.add({"x": 1}, {"t": 1.0}) is False
+        assert agg.n_results == 1 and agg.n_grouped == 0
+        assert not agg.groups
+
+    def test_ambiguous_key_never_raises_mid_stream(self):
+        """An ambiguous --group-by must not crash a live run from inside
+        the engine's on_result path: the result is skipped and the
+        resolution error is recorded for post-run surfacing."""
+        agg = ResultsAggregator(["size"])
+        combo = {"a:size": 1, "b:size": 2}
+        assert agg.add(combo, {"t": 1.0}) is False
+        assert "size" in agg.key_errors
+        assert "ambiguous" in agg.key_errors["size"]
+        assert agg.n_grouped == 0
+
+    def test_canonical_keys_fold_integral_floats(self):
+        agg = ResultsAggregator(["x"])
+        agg.add({"x": 2}, {"t": 1.0})
+        agg.add({"x": 2.0}, {"t": 3.0})
+        assert list(agg.groups) == [(2,)]
+        assert agg.groups[(2,)]["t"].n == 2
+
+    def test_speedup_and_efficiency(self):
+        agg = ResultsAggregator(["size", "threads"])
+        for size in (16, 32):
+            for p in (1, 2, 4):
+                agg.add({"size": size},
+                        {"threads": p, "time": 8.0 * size / p})
+        out = agg.speedup("time", {"threads": 1})
+        for (size, p), vals in out.items():
+            assert vals["speedup"] == pytest.approx(p)
+            assert vals["efficiency"] == pytest.approx(1.0)
+
+    def test_speedup_missing_baseline_group_is_none(self):
+        agg = ResultsAggregator(["threads"])
+        agg.add({"threads": 2}, {"time": 1.0})
+        out = agg.speedup("time", {"threads": 1})
+        assert out[(2,)]["speedup"] is None
+
+    def test_speedup_zero_baseline_is_data_not_missing(self):
+        """A legitimate 0 aggregate (e.g. an error counter) is data: the
+        ratio computes; only division by a 0 group value stays None."""
+        agg = ResultsAggregator(["threads"])
+        agg.add({"threads": 1}, {"errs": 0.0})
+        agg.add({"threads": 2}, {"errs": 4.0})
+        out = agg.speedup("errs", {"threads": 1})
+        assert out[(2,)]["speedup"] == 0.0          # 0 / 4
+        assert out[(1,)]["speedup"] is None         # x / 0 undefined
+
+    def test_baseline_must_pin_one_axis(self):
+        agg = ResultsAggregator(["a", "b"])
+        with pytest.raises(ValueError, match="exactly one"):
+            agg.speedup("t", {"a": 1, "b": 2})
+        with pytest.raises(KeyResolutionError):
+            agg.speedup("t", {"c": 1})
+
+    def test_streaming_memory_is_o_groups_at_1e4(self, tmp_path):
+        """≥10^4 instances through a windowed keep_results=False run:
+        aggregator state stays O(groups), engine state O(slots+window)."""
+        wdl = """
+t:
+  x: ["1:100"]
+  y: ["1:100"]
+  command: noop
+  capture:
+    m: "m=([0-9]+)"
+"""
+        study = _study(wdl, tmp_path)
+        n = study.instance_count()
+        assert n == 10_000
+        study.registry.update(
+            {"t": lambda combo: f"m={combo['x'] % 7}"})
+        agg = ResultsAggregator(["m"], track_median=False)
+        slots, window = 4, 64
+        results = study.run(window=window, slots=slots,
+                            keep_results=False, aggregator=agg)
+        assert results == {}, "keep_results=False must not accumulate"
+        assert agg.n_grouped == n
+        assert len(agg.groups) == 7, "state must be O(groups), not O(N)"
+        # with the exact median disabled, no per-result samples survive
+        for cells in agg.groups.values():
+            for stats in cells.values():
+                assert stats._median is None
+        assert sum(ms.n for c in agg.groups.values()
+                   for ms in c.values()) == n
+        assert study.last_run_stats["peak_live_nodes"] <= slots + window
+
+
+# ---------------------------------------------------------------------------
+# Resume semantics: metrics survive a crash, no re-extraction, no dupes
+# ---------------------------------------------------------------------------
+
+
+WDL_RESUME = """
+t:
+  x: ["1:40"]
+  command: noop
+  capture:
+    v:
+      regex: "v=([0-9]+)"
+      required: true
+"""
+
+
+class _Crash(RuntimeError):
+    pass
+
+
+def _run_with_crash(study, crash_after, **kwargs):
+    """Run until ``crash_after`` completions, then die mid-study (the
+    group-commit guarantee flushes everything recorded so far)."""
+    seen = [0]
+
+    def boom(res):
+        seen[0] += 1
+        if seen[0] >= crash_after:
+            raise _Crash
+
+    with pytest.raises(_Crash):
+        study.run(on_result=boom, **kwargs)
+    return seen[0]
+
+
+class TestResumeMetrics:
+    @pytest.mark.parametrize("window", [None, 8],
+                             ids=["eager", "windowed"])
+    def test_metrics_survive_resume(self, tmp_path, window, monkeypatch):
+        registry = {"t": lambda combo: f"v={combo['x']}"}
+        study = _study(WDL_RESUME, tmp_path, name=f"r{window}")
+        study.registry.update(registry)
+        n = study.instance_count()
+        crashed_at = _run_with_crash(study, crash_after=10, window=window)
+        pre = {r["task_id"]: r for r in study.db.records()
+               if r["status"] == "ok"}
+        assert len(pre) >= 10, "group commit must flush pre-crash metrics"
+
+        # fresh study object (new process semantics) + extraction counter
+        study2 = _study(WDL_RESUME, tmp_path, name=f"r{window}")
+        study2.registry.update(registry)
+        calls = [0]
+        orig = CaptureSet.extract
+
+        def counting(self, value, combo=None):
+            calls[0] += 1
+            return orig(self, value, combo)
+        monkeypatch.setattr(CaptureSet, "extract", counting)
+        results = study2.run(resume=True, window=window)
+        if window is None:
+            assert sum(1 for r in results.values()
+                       if r.status == "ok") == n
+        # completed instances are never re-extracted...
+        completed_before = len(pre)
+        assert calls[0] == n - completed_before
+        # ...and never re-recorded: exactly one ok record per task
+        ok_recs = [r for r in study2.db.records() if r["status"] == "ok"]
+        per_task: dict = {}
+        for r in ok_recs:
+            per_task.setdefault(r["task_id"], []).append(r)
+        assert len(per_task) == n
+        assert all(len(v) == 1 for v in per_task.values()), \
+            "duplicate ok records after resume"
+        # every pre-crash metric is still present, byte for byte
+        for tid, rec in pre.items():
+            assert per_task[tid][0]["metrics"] == rec["metrics"]
+        # and the full metric set covers the whole space
+        vs = sorted(r[0]["metrics"]["v"] for r in per_task.values())
+        assert vs == list(range(1, n + 1))
+
+    def test_windowed_resume_uses_v2_journal(self, tmp_path):
+        registry = {"t": lambda combo: f"v={combo['x']}"}
+        study = _study(WDL_RESUME, tmp_path, name="v2")
+        study.registry.update(registry)
+        _run_with_crash(study, crash_after=10, window=8)
+        doc = json.loads(study.journal.path.read_text())
+        assert doc["version"] == 2

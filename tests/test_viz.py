@@ -1,0 +1,40 @@
+"""DOT emission: labels/ids with quotes and backslashes must render as
+valid DOT (regression: unescaped characters broke the quoted tokens)."""
+from repro.core import TaskDAG, TaskNode, to_dot
+
+
+def _dag_with_hostile_names() -> TaskDAG:
+    dag = TaskDAG()
+    dag.add(TaskNode(id='t"a@c\\1', task='t"a', combo={}))
+    dag.add(TaskNode(id='t2@c\\1', task="t2", combo={},
+                     deps=['t"a@c\\1']))
+    return dag
+
+
+class TestDotEscaping:
+    def test_quotes_and_backslashes_escaped(self):
+        out = to_dot(_dag_with_hostile_names(), title='stu"dy\\x')
+        # the hostile id must appear only in escaped form
+        assert '"t\\"a@c\\\\1"' in out
+        assert '"stu\\"dy\\\\x"' in out
+        # edge statement uses the escaped ids on both ends
+        assert '"t\\"a@c\\\\1" -> "t2@c\\\\1";' in out
+
+    def test_every_quoted_token_is_balanced(self):
+        """Crude DOT well-formedness: stripping escaped sequences must
+        leave an even number of quotes on every line."""
+        out = to_dot(_dag_with_hostile_names(), title='q"t')
+        for line in out.splitlines():
+            bare = line.replace("\\\\", "").replace('\\"', "")
+            assert bare.count('"') % 2 == 0, line
+
+    def test_label_contains_escaped_task(self):
+        out = to_dot(_dag_with_hostile_names())
+        assert 'label="t\\"a\\nt\\"a@c\\\\1"' in out
+
+    def test_clean_names_unchanged(self):
+        dag = TaskDAG()
+        dag.add(TaskNode(id="t@c1", task="t", combo={}))
+        out = to_dot(dag, title="papas_study")
+        assert 'digraph "papas_study" {' in out
+        assert '"t@c1" [label="t\\nt@c1", fillcolor=gray];' in out
