@@ -19,29 +19,41 @@ lanes vs windowed lanes — compiled templates, gang-style lane batching,
 and group-commit recording are what separate the rows.  The
 ``lane_capture`` row re-runs the lane case with two regex ``capture:``
 extractors per task (the results subsystem's whole per-completion tax:
-extraction + classification + metric recording).  ``--throughput`` runs
-only these rows and exits nonzero if the lane pool regresses below half
-the recorded baseline (the CI floor), loses its ≥5× margin over the
-thread pool, or capture drops below 80% of the bare-lane floor.
+extraction + classification + metric recording).  The per-lever rows
+(``lane_mux`` → ``lane_adaptive`` → ``lane_sharded``) re-run the sweep
+with the throughput levers enabled one at a time — selector mux alone
+(static batch, per-command spools, one journal/DB shard), plus adaptive
+batch sizing, plus sharded group commit (= the default stack) — so a
+regression names its lever.  ``engine_spawn_*`` microbenches the
+``run_subprocess`` spawn paths (``posix_spawn`` vs ``subprocess.run``).
+``--throughput`` runs only these rows, writes them as a JSON artifact
+(``BENCH_throughput.json``; override with ``PAPAS_BENCH_OUT``), and
+exits nonzero if the lane pool regresses below half the recorded
+baseline (the CI floor), loses its ≥5× margin over the thread pool, or
+capture drops below 80% of the bare-lane floor.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import tempfile
 import time
 from pathlib import Path
 
-from repro.core import InlinePool, LocalTransport, ParameterStudy, Scheduler, \
-    StudyJournal, TaskDAG, TaskNode, make_pool, parse_yaml
+from repro.core import InlinePool, LaneWorkerPool, LocalTransport, \
+    ParameterStudy, Scheduler, StudyJournal, TaskDAG, TaskNode, make_pool, \
+    parse_yaml, run_subprocess
 
 N_SLEEP = 32
 SLEEP_S = 0.05
 SLOTS = 8
 
 #: recorded lane-pool baseline on the reference box (tasks/sec at 10^4
-#: no-op tasks, 8 lanes, batch 8).  ``--throughput`` fails below half
-#: this — a regression gate, not a leaderboard.
-LANE_TASKS_PER_SEC_BASELINE = 1800.0
+#: no-op tasks, 8 lanes, full lever stack: selector mux + adaptive
+#: batching + sharded group commit + spool reuse).  ``--throughput``
+#: fails below half this — a regression gate, not a leaderboard.
+LANE_TASKS_PER_SEC_BASELINE = 10_000.0
 
 WDL_SMALL = """
 t:
@@ -197,6 +209,44 @@ def _throughput_rows() -> list[tuple[str, float, dict]]:
                               "appends_per_flush": round(
                                   study.journal.n_appends
                                   / max(1, study.journal.n_flushes))}))
+
+        # per-lever attribution: the same sweep with the throughput
+        # levers enabled one at a time.  mux = selector front-end only
+        # (static batch 8, per-command stderr spools, single journal/DB
+        # shard); adaptive adds duration-driven batch sizing + spool
+        # reuse; sharded adds sharded group commit (= the default stack,
+        # the headline ``lane`` row above).
+        levers = [
+            ("lane_mux", dict(batch=8, reuse_spool=False), 1),
+            ("lane_adaptive", dict(batch="auto"), 1),
+            ("lane_sharded", dict(batch="auto"), None),
+        ]
+        for label, pool_kw, shards in levers:
+            study = ParameterStudy(parse_yaml(WDL_NOOP), root=root,
+                                   name=f"tp_{label}")
+            if shards is not None:
+                # pin the journal/DB shard count (None: engine default)
+                study._auto_shards = lambda worker, _k=shards: _k
+            n = study.instance_count()
+            pool = LaneWorkerPool(SLOTS, render=study.render_node,
+                                  **pool_kw)
+            done = [0]
+            t0 = time.perf_counter()
+            try:
+                study.run(pool=pool,
+                          on_result=lambda r: done.__setitem__(
+                              0, done[0] + 1))
+            finally:
+                pool.shutdown()
+            wall = time.perf_counter() - t0
+            assert done[0] == n, f"{label}: {done[0]}/{n} resolved"
+            tps[label] = n / wall
+            rows.append((f"engine_throughput_{label}", n / wall,
+                         {"tasks": n, "slots": SLOTS,
+                          "batch": pool_kw["batch"],
+                          "shards": shards or "auto",
+                          "wall_s": round(wall, 2),
+                          "tasks_per_sec": round(n / wall)}))
     rows.append(("engine_lane_speedup_vs_thread", 0.0,
                  {"speedup": round(tps["lane"] / tps["thread"], 1),
                   "meets_5x": tps["lane"] >= 5 * tps["thread"],
@@ -218,11 +268,39 @@ def _throughput_rows() -> list[tuple[str, float, dict]]:
     return rows
 
 
+def _spawn_rows() -> list[tuple[str, float, dict]]:
+    """``run_subprocess`` spawn-path microbench: ``posix_spawn`` (vfork,
+    no interpreter address-space fork) vs ``subprocess.run``."""
+    rows = []
+    popen_us, _ = _time_us(lambda: run_subprocess("true", spawn="popen"),
+                           repeats=30)
+    rows.append(("engine_spawn_popen", popen_us, {}))
+    try:
+        posix_us, _ = _time_us(
+            lambda: run_subprocess("true", spawn="posix"), repeats=30)
+    except RuntimeError:
+        return rows     # platform without posix_spawnp
+    rows.append(("engine_spawn_posix", posix_us,
+                 {"speedup_vs_popen": round(popen_us / posix_us, 2)}))
+    return rows
+
+
+def _write_artifact(rows: list[tuple[str, float, dict]]) -> None:
+    """Persist the throughput rows as JSON (CI artifact; path
+    overridable via ``PAPAS_BENCH_OUT``)."""
+    out = Path(os.environ.get("PAPAS_BENCH_OUT", "BENCH_throughput.json"))
+    doc = {name: {"value_us_or_tps": round(val, 1), **derived}
+           for name, val, derived in rows}
+    out.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"[artifact] {out}")
+
+
 def check_throughput_floor() -> int:
     """CI gate: run only the throughput rows; nonzero exit when the lane
     pool falls below half the recorded baseline or loses its ≥5× margin
     over the thread pool."""
-    rows = _throughput_rows()
+    rows = _spawn_rows() + _throughput_rows()
+    _write_artifact(rows)
     ok = capture_ok = True
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
@@ -360,6 +438,7 @@ def run() -> list[tuple[str, float, dict]]:
 
     rows.extend(_streaming_rows())
     rows.extend(_makespan_rows())
+    rows.extend(_spawn_rows())
     rows.extend(_throughput_rows())
     return rows
 

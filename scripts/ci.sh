@@ -21,10 +21,12 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
     tests/test_journal_v2.py
 
 # short-task throughput path: compiled templates, persistent worker
-# lanes, group-commit recording — pinned by name
+# lanes (selector mux + frame reassembly), group-commit recording
+# (incl. sharded segments), and the dispatch levers (adaptive batching,
+# spawn elimination, straggler quantiles, auto window) — pinned by name
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
     tests/test_compiled_templates.py tests/test_lane_pool.py \
-    tests/test_group_commit.py
+    tests/test_group_commit.py tests/test_dispatch_levers.py
 
 # results subsystem: capture grammar, streaming aggregation, resume
 # semantics for metrics, report rendering — pinned by name
@@ -56,8 +58,12 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py \
     --report
 
 # short-task throughput floor: 10^4 no-op tasks through thread vs lane
-# vs windowed-lane vs lane+capture; fails if the lane pool drops below
-# half the recorded baseline, loses its >=5x margin over the thread
-# pool, or metric capture costs more than 20% of the bare-lane floor
+# vs windowed-lane vs lane+capture, plus per-lever rows (mux /
+# adaptive-batch / sharded) and the spawn-path microbench; writes
+# BENCH_throughput.json and fails if the lane pool drops below half the
+# recorded 10^4 tasks/s baseline (5000 tasks/s floor, raised from 900
+# with the selector-mux dispatch path), loses its >=5x margin over the
+# thread pool, or metric capture costs more than 20% of the bare-lane
+# floor
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python \
     benchmarks/engine_overhead.py --throughput

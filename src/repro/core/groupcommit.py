@@ -1,21 +1,33 @@
-"""Group-commit append writer shared by the journal and provenance DB.
+"""Group-commit append writers shared by the journal and provenance DB.
 
-One buffered writer over one long-lived append handle: entries
-accumulate in memory and flush as a group every ``flush_count`` appends
-or ``flush_interval`` seconds (checked at append time), dropping
-bookkeeping cost from one open+flush per record to amortized
-O(1/flush_count).  The default policy (1, None) is durable-per-append.
+``GroupCommitWriter`` is one buffered writer over one long-lived append
+handle: entries accumulate in memory and flush as a group every
+``flush_count`` appends or ``flush_interval`` seconds (checked at append
+time), dropping bookkeeping cost from one open+flush per record to
+amortized O(1/flush_count).  The default policy (1, None) is
+durable-per-append.
 
-The writer is deliberately lock-free: ``StudyJournal`` and ``StudyDB``
-call it under their own locks, which also guard the surrounding
-document state.  Readers get buffered-entry visibility through
-``pending()``.
+``ShardedGroupCommit`` spreads that stream over K per-shard append
+*segments* (shard 0 is the legacy path itself; shard k is
+``<path>.s<k>``) so concurrent completion streams — worker lanes, a
+process pool — never serialize on one buffered handle's flush.  Readers
+union the segments (``segment_paths()`` globs whatever exists on disk,
+including stale segments from a previous run with more shards), so the
+merged view is identical to the single-handle world.
+
+Both writers are deliberately lock-free: ``StudyJournal`` and
+``StudyDB`` call them under their own locks, which also guard the
+surrounding document state.  Readers get buffered-entry visibility
+through ``pending()``.
 """
 from __future__ import annotations
 
+import re
 import time
 from pathlib import Path
 from typing import Any
+
+_SEG_RE = re.compile(r"\.s(\d+)$")
 
 
 class GroupCommitWriter:
@@ -90,3 +102,127 @@ class GroupCommitWriter:
         self.flush_count = max(1, int(flush_count))
         self.flush_interval = flush_interval
         return prev
+
+
+class ShardedGroupCommit:
+    """K ``GroupCommitWriter``\\ s over per-shard append segments.
+
+    Drop-in for a single ``GroupCommitWriter`` (same append/flush/policy
+    surface; counters aggregate), plus ``set_shards`` to re-split the
+    stream and ``segment_paths`` for readers.  Appends round-robin
+    across shards, so each shard's flush covers ~1/K of the entries and
+    no single handle becomes the serialization point.  The default —
+    one shard — *is* the legacy single-handle writer, byte-for-byte."""
+
+    def __init__(self, path: Path, flush_count: int = 1,
+                 flush_interval: float | None = None,
+                 shards: int = 1) -> None:
+        self.path = Path(path)
+        self._writers = [
+            GroupCommitWriter(self._shard_path(k), flush_count,
+                              flush_interval)
+            for k in range(max(1, int(shards)))]
+        self._rr = 0
+        # counters carried over from writers dropped by set_shards, so
+        # n_appends/n_flushes stay whole-stream totals across re-splits
+        self._retired_appends = 0
+        self._retired_flushes = 0
+
+    def _shard_path(self, k: int) -> Path:
+        return (self.path if k == 0
+                else self.path.with_name(self.path.name + f".s{k}"))
+
+    @property
+    def shards(self) -> int:
+        return len(self._writers)
+
+    def set_shards(self, shards: int) -> None:
+        """Re-split the stream over ``shards`` segments.  A no-op when
+        the count already matches; dropped writers flush and close
+        first, so re-splitting never loses buffered entries."""
+        shards = max(1, int(shards))
+        if shards == len(self._writers):
+            return
+        for w in self._writers[shards:]:
+            w.close()
+            self._retired_appends += w.n_appends
+            self._retired_flushes += w.n_flushes
+        del self._writers[shards:]
+        fc = self._writers[0].flush_count
+        fi = self._writers[0].flush_interval
+        while len(self._writers) < shards:
+            self._writers.append(
+                GroupCommitWriter(self._shard_path(len(self._writers)),
+                                  fc, fi))
+        self._rr = 0
+
+    def segment_paths(self) -> list[Path]:
+        """Every on-disk segment, base first then ``.s<k>`` ascending —
+        globbed, not enumerated from the current writers, so a resume
+        with fewer shards still reads every segment a previous run
+        wrote."""
+        out = [self.path] if self.path.exists() else []
+        extra = []
+        for p in self.path.parent.glob(self.path.name + ".s*"):
+            m = _SEG_RE.search(p.name)
+            if m and p.name[:-len(m.group(0))] == self.path.name:
+                extra.append((int(m.group(1)), p))
+        out.extend(p for _, p in sorted(extra))
+        return out
+
+    def unlink_segments(self) -> None:
+        """Remove every on-disk segment (compaction folded them into a
+        fresh base document)."""
+        for p in self.segment_paths():
+            try:
+                p.unlink()
+            except FileNotFoundError:
+                pass
+
+    # -- GroupCommitWriter surface ----------------------------------------
+    @property
+    def flush_count(self) -> int:
+        return self._writers[0].flush_count
+
+    @property
+    def flush_interval(self) -> float | None:
+        return self._writers[0].flush_interval
+
+    @property
+    def n_appends(self) -> int:
+        return self._retired_appends + sum(w.n_appends
+                                           for w in self._writers)
+
+    @property
+    def n_flushes(self) -> int:
+        return self._retired_flushes + sum(w.n_flushes
+                                           for w in self._writers)
+
+    def append(self, line: str, force: bool = False) -> None:
+        w = self._writers[self._rr]
+        self._rr = (self._rr + 1) % len(self._writers)
+        w.append(line, force)
+
+    def pending(self) -> list[str]:
+        return [line for w in self._writers for line in w.pending()]
+
+    def flush(self) -> None:
+        for w in self._writers:
+            w.flush()
+
+    def close(self) -> None:
+        for w in self._writers:
+            w.close()
+
+    def drop_buffered(self) -> None:
+        for w in self._writers:
+            w.drop_buffered()
+
+    def set_policy(self, flush_count: int,
+                   flush_interval: float | None) -> tuple[int, float | None]:
+        prev: tuple[int, float | None] | None = None
+        for w in self._writers:
+            p = w.set_policy(flush_count, flush_interval)
+            if prev is None:
+                prev = p
+        return prev if prev is not None else (flush_count, flush_interval)

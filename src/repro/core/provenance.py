@@ -15,11 +15,18 @@ handle and flush per batch (``flush_count`` entries / ``flush_interval``
 seconds), with two hard guarantees — a non-``ok`` record flushes its
 batch immediately (failure forensics never wait), and exiting the
 context (normally or via an exception) flushes everything.
+
+For high-rate dispatch the stream can additionally *shard*
+(``set_shards``): records round-robin over per-shard append segments
+(``records.jsonl`` + ``records.jsonl.s<k>``) so no single buffered
+handle serializes completions, and ``records()`` k-way-merges the
+segments by timestamp back into one ordered stream.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import heapq
 import json
 import os
 import threading
@@ -28,7 +35,7 @@ from contextlib import contextmanager
 from pathlib import Path
 from typing import Any, Iterator, Mapping
 
-from .groupcommit import GroupCommitWriter
+from .groupcommit import ShardedGroupCommit
 
 
 def config_hash(obj: Any) -> str:
@@ -40,14 +47,24 @@ class StudyDB:
     """Append-only provenance store for one parameter study."""
 
     def __init__(self, root: str | Path, study: str, flush_count: int = 1,
-                 flush_interval: float | None = None) -> None:
+                 flush_interval: float | None = None,
+                 shards: int = 1) -> None:
         self.dir = Path(root) / study
         self.dir.mkdir(parents=True, exist_ok=True)
         self.records_path = self.dir / "records.jsonl"
         self.meta_path = self.dir / "study.json"
-        self._writer = GroupCommitWriter(self.records_path, flush_count,
-                                         flush_interval)
+        self._writer = ShardedGroupCommit(self.records_path, flush_count,
+                                          flush_interval, shards)
         self._lock = threading.Lock()
+
+    def set_shards(self, shards: int) -> None:
+        """Split (or re-merge) the record stream across ``shards``
+        append segments (``records.jsonl`` + ``records.jsonl.s<k>``) so
+        high-rate dispatch never serializes on one buffered handle.
+        ``records()`` merges segments by timestamp, so readers see the
+        same stream order as the single-handle world."""
+        with self._lock:
+            self._writer.set_shards(shards)
 
     # the DB rides along when a bound runner is pickled to a process
     # pool; the lock is process-local state (the writer drops its own
@@ -126,14 +143,13 @@ class StudyDB:
             "status": status,
             "runtime": runtime,
             "combo": dict(combo) if combo else None,
-            "combo_hash": config_hash(combo) if combo else None,
             "metrics": dict(metrics) if metrics else None,
             "timestamp": time.time(),
             **extra,
         }
         if index is not None:
             rec["index"] = int(index)
-        line = json.dumps(rec, default=str) + "\n"
+        line = json.dumps(rec, default=str, separators=(",", ":")) + "\n"
         with self._lock:
             # a failed attempt flushes its whole batch immediately:
             # post-mortems must never wait on a group-commit window
@@ -141,15 +157,24 @@ class StudyDB:
 
     def records(self) -> Iterator[dict[str, Any]]:
         self.flush()
-        if not self.records_path.exists():
+        paths = self._writer.segment_paths()
+        if not paths:
             return iter(())
-        def _it() -> Iterator[dict[str, Any]]:
-            with self.records_path.open() as f:
+
+        def _it(path: Path) -> Iterator[dict[str, Any]]:
+            with path.open() as f:
                 for line in f:
                     line = line.strip()
                     if line:
                         yield json.loads(line)
-        return _it()
+        if len(paths) == 1:
+            return _it(paths[0])
+        # per-segment streams are timestamp-ordered (appends are
+        # monotonic within a shard), so a k-way merge restores the
+        # global stream order of the single-handle world — later
+        # attempts still shadow earlier ones for every reader
+        return heapq.merge(*(_it(p) for p in paths),
+                           key=lambda r: r.get("timestamp") or 0.0)
 
     def completed_ids(self) -> set[str]:
         return {r["task_id"] for r in self.records() if r["status"] == "ok"}

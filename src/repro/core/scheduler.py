@@ -59,6 +59,8 @@ from typing import Any, Callable, Mapping
 
 from .dag import DAGError, TaskDAG, TaskNode
 from .executors import CompletionEvent, InlinePool, WorkerPool
+from .stats import StreamingMedian as _StreamingMedian  # noqa: F401 (back-compat)
+from .stats import StreamingQuantile
 
 
 @dataclasses.dataclass
@@ -156,36 +158,41 @@ class VirtualPool(WorkerPool):
         return CompletionEvent(token, [value], [error], start, stop)
 
 
-class _StreamingMedian:
-    """Dual-heap running median: O(log n) insert, O(1) query.
+class AdaptiveWindow:
+    """Completion-rate-driven streaming window (``run(window="auto")``).
 
-    Matches ``sorted(xs)[len(xs) // 2]`` (the upper median) exactly, so
-    swapping it in for the per-event ``sorted()`` recompute changes no
-    speculation decision — only the cost, from O(n log n) per completion
-    to O(log n)."""
+    The window bounds live nodes at ``slots + current``.  Instead of a
+    hand-tuned constant, the controller measures the resolution rate
+    over short intervals and sizes the window to hold roughly
+    ``horizon`` seconds of work: fast no-op sweeps grow toward
+    ``max_window`` (admission never starves the pool), slow studies
+    shrink toward ``slots`` (live state stays tiny).  Moves are smoothed
+    50/50 toward the target so one noisy interval cannot thrash the
+    admission bound."""
 
-    __slots__ = ("_lo", "_hi")
+    def __init__(self, slots: int = 1, min_window: int | None = None,
+                 max_window: int = 4096, horizon: float = 0.5) -> None:
+        self.min = max(1, min_window if min_window is not None else slots)
+        self.max = max(self.min, max_window)
+        self.horizon = horizon
+        #: current window size (live bound is ``slots + current``)
+        self.current = self.min
+        self._t0: float | None = None
+        self._n0 = 0
 
-    def __init__(self) -> None:
-        self._lo: list[float] = []   # max-heap (negated): lower half
-        self._hi: list[float] = []   # min-heap: upper half (≥ lower)
-
-    def add(self, x: float) -> None:
-        if self._lo and x <= -self._lo[0]:
-            heapq.heappush(self._lo, -x)
-        else:
-            heapq.heappush(self._hi, x)
-        if len(self._hi) > len(self._lo) + 1:
-            heapq.heappush(self._lo, -heapq.heappop(self._hi))
-        elif len(self._lo) > len(self._hi):
-            heapq.heappush(self._hi, -heapq.heappop(self._lo))
-
-    def __len__(self) -> int:
-        return len(self._lo) + len(self._hi)
-
-    def median(self) -> float:
-        """The upper median (undefined on an empty stream)."""
-        return self._hi[0]
+    def observe(self, now: float, n_resolved: int) -> None:
+        """Feed the controller the loop's clock + resolution counter."""
+        if self._t0 is None:
+            self._t0, self._n0 = now, n_resolved
+            return
+        dt = now - self._t0
+        if dt < self.horizon / 4:
+            return
+        rate = (n_resolved - self._n0) / dt
+        target = int(rate * self.horizon)
+        self.current = max(self.min,
+                           min(self.max, (self.current + target + 1) // 2))
+        self._t0, self._n0 = now, n_resolved
 
 
 @dataclasses.dataclass
@@ -212,20 +219,31 @@ class Scheduler:
         clock: Callable[[], float] = time.monotonic,
         order: str = "breadth",
         speculate: bool = False,
+        straggler_quantile: float | None = None,
     ) -> None:
         """``order``: "breadth" finishes each task level across all
         workflow instances first; "depth" completes one instance's whole
         task chain before starting the next (paper §9 future work).
         ``speculate``: launch a duplicate of any running task slower than
-        ``straggler_factor ×`` the median runtime (≥ 5 samples) when a
-        slot is idle; only enable for idempotent runners."""
+        the straggler cutoff (≥ 5 samples) when a slot is idle; only
+        enable for idempotent runners.  The cutoff is
+        ``straggler_factor ×`` the median runtime, or — when
+        ``straggler_quantile`` is set (e.g. 0.9 for p90, the WDL
+        ``straggler_quantile:`` keyword) — the running q-quantile of
+        completed runtimes directly, no factor applied."""
         if slots < 1:
             raise ValueError("slots must be >= 1")
         if order not in ("breadth", "depth"):
             raise ValueError(f"unknown order {order!r}")
+        if straggler_quantile is not None \
+                and not 0.0 < straggler_quantile < 1.0:
+            raise ValueError(
+                f"straggler_quantile must be in (0, 1), "
+                f"got {straggler_quantile!r}")
         self.slots = slots
         self.max_retries = max_retries
         self.straggler_factor = straggler_factor
+        self.straggler_quantile = straggler_quantile
         self.clock = clock
         self.order = order
         self.speculate = speculate
@@ -269,7 +287,7 @@ class Scheduler:
         on_result: Callable[[TaskResult], None] | None = None,
         pool: WorkerPool | None = None,
         source: Any = None,
-        window: int | None = None,
+        window: int | AdaptiveWindow | None = None,
         keep_results: bool = True,
         classify: Callable[[TaskNode, Any], str | None] | None = None,
     ) -> dict[str, TaskResult]:
@@ -312,7 +330,8 @@ class Scheduler:
         """
         if (source is None) != (window is None):
             raise ValueError("source and window must be passed together")
-        if window is not None and window < 1:
+        if window is not None and not isinstance(window, AdaptiveWindow) \
+                and window < 1:
             raise ValueError("window must be >= 1")
         dag.validate()
         completed = set(completed or ())
@@ -335,11 +354,12 @@ class Scheduler:
         on_result: Callable[[TaskResult], None] | None,
         pool: WorkerPool,
         source: Any = None,
-        window: int | None = None,
+        window: int | AdaptiveWindow | None = None,
         keep_results: bool = True,
         classify: Callable[[TaskNode, Any], str | None] | None = None,
     ) -> dict[str, TaskResult]:
         streaming = source is not None
+        win_ctrl = window if isinstance(window, AdaptiveWindow) else None
         succ = dag.successors()
         indeg = {nid: sum(1 for d in n.deps if d not in completed)
                  for nid, n in dag.nodes.items()}
@@ -367,7 +387,9 @@ class Scheduler:
         failed_closure: set[str] = set()
         attempts: dict[str, int] = {}
         first_started: dict[str, float] = {}
-        runtimes = _StreamingMedian()
+        runtimes = StreamingQuantile(self.straggler_quantile
+                                     if self.straggler_quantile is not None
+                                     else 0.5)
         free: list[int] = list(range(self.slots))
         heapq.heapify(free)
         running: dict[int, _Dispatch] = {}
@@ -440,7 +462,8 @@ class Scheduler:
                 nodes, done_ids = pending[0]
                 live_after = len(dag.nodes) + sum(
                     1 for n in nodes if n.id not in done_ids)
-                if live_after > self.slots + window and not (
+                wsize = win_ctrl.current if win_ctrl is not None else window
+                if live_after > self.slots + wsize and not (
                         force and not admitted_any):
                     break
                 pending.pop(0)
@@ -590,42 +613,60 @@ class Scheduler:
                                 f"timeout: no completion within {limit:.3f}s",
                                 d.dispatched, now)
 
-        def _median_runtime() -> float | None:
+        def _strag_elapsed() -> float | None:
+            """Elapsed-time cutoff past which a running task counts as a
+            straggler: ``straggler_factor × median``, or the tracked
+            runtime quantile directly in ``straggler_quantile`` mode."""
             if len(runtimes) < 5:
                 return None
-            med = runtimes.median()
-            return med if med > 0 else None
+            v = runtimes.quantile()
+            if v <= 0:
+                return None
+            if self.straggler_quantile is not None:
+                return v
+            return self.straggler_factor * v
 
         while True:
+            if win_ctrl is not None:
+                win_ctrl.observe(self.clock(), n_resolved)
             _admit()
             if exhausted and not pending and n_resolved >= expected:
                 break
-            # resolve failure-closure nodes without occupying slots
-            while True:
-                doomed = [nid for nid in ready if nid in failed_closure]
-                ready[:] = [nid for nid in ready
-                            if nid not in failed_closure
-                            and nid not in resolved_ids]
-                if not doomed:
-                    break
-                for nid in doomed:
-                    if nid not in resolved_ids:
-                        _skip(nid)
+            # resolve failure-closure nodes without occupying slots.
+            # Skipped entirely on clean runs: the O(ready) rescan per
+            # event was the single largest engine cost at 10^4 tasks.
+            if failed_closure:
+                while True:
+                    doomed = [nid for nid in ready if nid in failed_closure]
+                    ready[:] = [nid for nid in ready
+                                if nid not in failed_closure
+                                and nid not in resolved_ids]
+                    if not doomed:
+                        break
+                    for nid in doomed:
+                        if nid not in resolved_ids:
+                            _skip(nid)
 
             while free and ready:
                 batch = pool.take(ready, dag)
                 if not batch:
                     break
+                # a retried node can resolve via a speculative duplicate
+                # while its retry entry still sits in ``ready`` — filter
+                # at take time instead of rescanning the whole queue
+                batch = [nid for nid in batch if nid not in resolved_ids]
+                if not batch:
+                    continue
                 _dispatch(batch, speculative=False)
 
             # speculative straggler duplicates on leftover slots: pop the
             # earliest-dispatched candidates past the cutoff (entries are
             # lazily invalidated; a consumed-but-still-running primary is
             # re-pushed if its duplicate fails)
-            med = _median_runtime() if self.speculate else None
-            if med is not None and free and strag_heap:
+            limit = _strag_elapsed() if self.speculate else None
+            if limit is not None and free and strag_heap:
                 now = self.clock()
-                cutoff = now - self.straggler_factor * med
+                cutoff = now - limit
                 while free and strag_heap and strag_heap[0][0] <= cutoff:
                     _, tok = heapq.heappop(strag_heap)
                     d = running.get(tok)
@@ -668,7 +709,7 @@ class Scheduler:
                 heapq.heappop(deadline_heap)    # stale: dispatch finished
             if deadline_heap:
                 horizons.append(deadline_heap[0][0])
-            if med is not None:
+            if limit is not None:
                 # earliest still-eligible straggler candidate bounds the
                 # next speculation horizon
                 while strag_heap:
@@ -678,7 +719,7 @@ class Scheduler:
                             or len(live_tokens.get(d.nids[0], ())) != 1):
                         heapq.heappop(strag_heap)
                         continue
-                    horizons.append(t0s + self.straggler_factor * med)
+                    horizons.append(t0s + limit)
                     break
             future = [h for h in horizons if h > now]
             if future:

@@ -38,6 +38,19 @@ which guarantees the buffer is flushed when the run returns *or raises*
 at the last flush boundary, and nothing at all once ``run()`` exits.
 Readers (``load_state``/``hosts``) see buffered entries immediately:
 the log view is file contents plus the in-memory tail.
+
+**Sharding.**  Under a many-lane or multi-process backend the single
+buffered log handle becomes the completion stream's serialization
+point, so the sidecar log can split into per-shard append segments
+(``<name>.log`` plus ``<name>.log.s1`` …): ``mark_complete`` round-
+robins across K independent group-commit writers and readers union
+every segment on disk.  Compaction (``save``/``save_indexed``) folds
+all segments into the base document and removes them, and
+``load_state()`` globs segments rather than trusting the current shard
+count — a crash mid-run with any shard layout resumes to the same
+merged state as the single-handle world.  The engine picks a shard
+count from the pool's parallelism (``run()``); standalone journals
+default to one shard, which *is* the legacy layout.
 """
 from __future__ import annotations
 
@@ -49,7 +62,7 @@ from contextlib import contextmanager
 from pathlib import Path
 from typing import Any, Iterable, Iterator, Mapping
 
-from .groupcommit import GroupCommitWriter
+from .groupcommit import ShardedGroupCommit
 
 
 def compress_ranges(indices: Iterable[int]) -> list[list[int]]:
@@ -85,17 +98,30 @@ class JournalState:
 
 class StudyJournal:
     def __init__(self, path: str | Path, flush_count: int = 1,
-                 flush_interval: float | None = None) -> None:
+                 flush_interval: float | None = None,
+                 shards: int = 1) -> None:
         """``flush_count``/``flush_interval`` configure the batched
         writer: buffered appends flush every N entries or T seconds,
         whichever comes first.  The default (1, None) keeps the legacy
-        one-durable-write-per-completion behavior."""
+        one-durable-write-per-completion behavior.  ``shards`` splits
+        the sidecar log into per-shard append segments (see
+        ``set_shards``); readers union them, so 1 — the default — is
+        the legacy single-log layout."""
         self.path = Path(path)
         self.log_path = self.path.with_name(self.path.name + ".log")
-        self._writer = GroupCommitWriter(self.log_path, flush_count,
-                                         flush_interval)
+        self._writer = ShardedGroupCommit(self.log_path, flush_count,
+                                          flush_interval, shards)
         self._base_known = False    # base existence verified (skip stats)
         self._lock = threading.Lock()
+
+    def set_shards(self, shards: int) -> None:
+        """Split (or re-merge) the sidecar log across ``shards`` append
+        segments so a many-lane or multi-process run never serializes
+        its completion stream on one buffered handle.  Safe mid-life:
+        dropped segments flush first, and ``load_state()`` unions every
+        segment on disk regardless of the current count."""
+        with self._lock:
+            self._writer.set_shards(shards)
 
     def exists(self) -> bool:
         return self.path.exists()
@@ -157,12 +183,12 @@ class StudyJournal:
         self._writer.drop_buffered()
         tmp = self.path.with_suffix(".tmp")
         self.path.parent.mkdir(parents=True, exist_ok=True)
-        tmp.write_text(json.dumps(doc, default=str))
+        tmp.write_text(json.dumps(doc, default=str,
+                                  separators=(",", ":")))
         os.replace(tmp, self.path)
         self._base_known = True
-        # the log's entries are folded into the base we just wrote
-        if self.log_path.exists():
-            self.log_path.unlink()
+        # every log segment's entries are folded into the base just wrote
+        self._writer.unlink_segments()
 
     def _write_base(
         self,
@@ -236,14 +262,17 @@ class StudyJournal:
                 if not self.path.exists():
                     self._write_base([], set(), {})
                 self._base_known = True
-            self._writer.append(json.dumps(entry) + "\n")
+            self._writer.append(
+                json.dumps(entry, separators=(",", ":")) + "\n")
 
     # -- readers ----------------------------------------------------------
     def _log_entries(self) -> Iterator[dict[str, Any]]:
-        # file contents first, then the unflushed in-memory tail — a
-        # reader holding the lock sees every recorded completion
-        if self.log_path.exists():
-            with self.log_path.open() as f:
+        # every on-disk segment first (union over shards — including
+        # segments a previous run wrote with a different shard count),
+        # then the unflushed in-memory tail — a reader holding the lock
+        # sees every recorded completion
+        for seg in self._writer.segment_paths():
+            with seg.open() as f:
                 for line in f:
                     line = line.strip()
                     if line:

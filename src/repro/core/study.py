@@ -43,7 +43,7 @@ from .executors import (
 from .paramspace import ParameterSpace, combo_id, from_task
 from .provenance import StudyDB
 from .results import build_capture_sets
-from .scheduler import Scheduler, TaskResult
+from .scheduler import AdaptiveWindow, Scheduler, TaskResult
 from .state import StudyJournal
 from .wdl import StudySpec, TaskSpec, parse_file
 from .viz import to_ascii, to_dot
@@ -264,6 +264,35 @@ class ParameterStudy:
                         f"{tname!r} declares {val!r}")
         return out
 
+    def _spec_straggler_quantile(self) -> float | None:
+        """The WDL ``straggler_quantile:`` keyword, merged across tasks
+        (the scheduler has one cutoff rule per run, so divergent
+        declarations are a spec error)."""
+        out: float | None = None
+        owner: str | None = None
+        for tname, task in self.spec.tasks.items():
+            q = task.straggler_quantile
+            if q is None:
+                continue
+            if out is None:
+                out, owner = q, tname
+            elif out != q:
+                raise ValueError(
+                    f"conflicting straggler_quantile: task {owner!r} "
+                    f"declares {out!r} but task {tname!r} declares {q!r}")
+        return out
+
+    @staticmethod
+    def _auto_shards(worker: WorkerPool) -> int:
+        """Journal/DB shard count for a backend: high-rate local
+        parallel pools (lanes, processes) split the completion stream so
+        group commits never serialize on one handle; everything else
+        keeps the legacy single-segment layout."""
+        slots = int(getattr(worker, "slots", 1) or 1)
+        if getattr(worker, "kind", "") in ("lane", "process") and slots > 1:
+            return min(4, slots)
+        return 1
+
     def _make_worker(
         self,
         pool: str | WorkerPool,
@@ -414,10 +443,11 @@ class ParameterStudy:
         nnodes: int | None = None,
         transport: Any = None,
         submitter: Any = None,
-        window: int | None = None,
+        window: int | str | None = None,
         on_result: Callable[[TaskResult], None] | None = None,
         keep_results: bool = True,
         aggregator: Any = None,
+        straggler_quantile: float | None = None,
     ) -> dict[str, TaskResult]:
         """Execute the study through the unified event engine.
 
@@ -445,6 +475,14 @@ class ParameterStudy:
         ``slots + N`` task nodes stay live, and the journal is compact
         v2 — startup and memory stay O(slots + window) however large the
         space (``window=None`` keeps the eager whole-DAG path).
+        ``window="auto"`` sizes the admission window adaptively from the
+        observed completion rate (about half a second of throughput,
+        clamped to [slots, 4096]) so short-task sweeps stop hand-tuning
+        ``--window``.  ``straggler_quantile`` (e.g. 0.9 for p90)
+        replaces the default ``straggler_factor × median`` straggler
+        cutoff with the running runtime quantile; the WDL
+        ``straggler_quantile:`` keyword sets the same thing, with the
+        argument winning when both appear.
 
         ``on_result`` streams each ``TaskResult`` to the caller as it
         resolves (after journal/provenance bookkeeping).
@@ -466,6 +504,12 @@ class ParameterStudy:
         run aggregates in O(groups) memory with no result accumulation
         anywhere.
         """
+        if isinstance(window, str) and window != "auto":
+            raise ValueError(
+                f"window must be a positive int, 'auto', or None; "
+                f"got {window!r}")
+        if straggler_quantile is None:
+            straggler_quantile = self._spec_straggler_quantile()
         if window is not None:
             return self._run_windowed(
                 window=window, slots=slots, resume=resume, runner=runner,
@@ -473,7 +517,8 @@ class ParameterStudy:
                 speculate=speculate, hosts=hosts, ppnode=ppnode,
                 nnodes=nnodes, transport=transport, submitter=submitter,
                 on_result=on_result, keep_results=keep_results,
-                aggregator=aggregator)
+                aggregator=aggregator,
+                straggler_quantile=straggler_quantile)
         instances = self.instances()
         completed: set[str] = set()
         if resume and self.journal.exists():
@@ -534,7 +579,14 @@ class ParameterStudy:
         # size — one dispatch already hosts a whole group)
         slots = max(slots, getattr(worker, "dispatch_slots", slots) or slots)
         sched = Scheduler(slots=slots, max_retries=max_retries,
-                          speculate=speculate)
+                          speculate=speculate,
+                          straggler_quantile=straggler_quantile)
+        # high-rate parallel backends shard the completion streams so
+        # group commits never serialize on one buffered handle; the
+        # compaction below folds every segment back into the base
+        shards = self._auto_shards(worker)
+        self.journal.set_shards(shards)
+        self.db.set_shards(shards)
         self._run_base_env = dict(os.environ)   # one snapshot per run
         try:
             with self.journal.group_commit(self.flush_count,
@@ -551,6 +603,8 @@ class ParameterStudy:
         # compact the journal: fold the append log back into the base
         self.journal.save(instances, completed, {"name": self.name},
                           hosts=host_map)
+        self.journal.set_shards(1)
+        self.db.set_shards(1)
         self.last_run_stats = {
             "peak_live_nodes": sched.peak_live_nodes,
             "n_instances": len(instances),
@@ -559,7 +613,7 @@ class ParameterStudy:
 
     def _run_windowed(
         self,
-        window: int,
+        window: int | str,
         slots: int,
         resume: bool,
         runner: Callable[[TaskNode], Any] | None,
@@ -575,6 +629,7 @@ class ParameterStudy:
         on_result: Callable[[TaskResult], None] | None = None,
         keep_results: bool = True,
         aggregator: Any = None,
+        straggler_quantile: float | None = None,
     ) -> dict[str, TaskResult]:
         """Streaming execution: windowed admission + journal v2."""
         space = self.space()
@@ -650,8 +705,17 @@ class ParameterStudy:
                 on_result(res)
 
         slots = max(slots, getattr(worker, "dispatch_slots", slots) or slots)
+        # "auto": size the admission window from the observed completion
+        # rate (~half a second of throughput), floored at the slot count
+        win: int | AdaptiveWindow = (AdaptiveWindow(slots=slots)
+                                     if window == "auto" else window)
         sched = Scheduler(slots=slots, max_retries=max_retries,
-                          speculate=speculate)
+                          speculate=speculate,
+                          straggler_quantile=straggler_quantile)
+        # see the eager path: shard the completion streams for the run
+        shards = self._auto_shards(worker)
+        self.journal.set_shards(shards)
+        self.db.set_shards(shards)
         self._run_base_env = dict(os.environ)   # one snapshot per run
         try:
             with self.journal.group_commit(self.flush_count,
@@ -660,7 +724,7 @@ class ParameterStudy:
                                          self.flush_interval):
                 results = sched.execute(dag, run_fn, on_result=_on_result,
                                         pool=worker, source=source,
-                                        window=window,
+                                        window=win,
                                         keep_results=keep_results,
                                         classify=capture_classify)
         finally:
@@ -669,13 +733,16 @@ class ParameterStudy:
         # compact: fold the append log back into a fresh v2 base
         self.journal.save_indexed(shash, n_instances, completed_idx,
                                   {"name": self.name}, hosts=host_map)
+        self.journal.set_shards(1)
+        self.db.set_shards(1)
         self.last_run_stats = {
             "peak_live_nodes": sched.peak_live_nodes,
             "n_instances": n_instances,
             "admitted_instances": source.admitted,
             "skipped_complete": source.skipped,
             "slots": slots,     # post-lift: the admission bound's slots
-            "window": window,
+            "window": win.current if isinstance(win, AdaptiveWindow)
+            else window,
         }
         return results
 

@@ -15,8 +15,10 @@ Implements the keyword-value WDL of Ponce et al. (PEARC'18) §5:
 
 Reserved keywords (paper §5): command, name, environ, after, infiles,
 outfiles, substitute, parallel, batch, nnodes, ppnode, hosts, fixed,
-sampling — plus four framework extensions: ``timeout`` (per-attempt
-wall-clock bound enforced by the scheduler), ``allow_nonzero``
+sampling — plus framework extensions: ``timeout`` (per-attempt
+wall-clock bound enforced by the scheduler), ``straggler_quantile``
+(straggler cutoff as a runtime quantile, e.g. ``p90`` or ``0.9``,
+instead of the default ``straggler_factor × median``), ``allow_nonzero``
 (nonzero shell exits are data, not failures), ``capture`` (declarative
 metric extraction — a mapping of metric names to extractors over task
 output: a regex string, or a mapping with exactly one of
@@ -61,6 +63,7 @@ RESERVED_KEYWORDS = frozenset(
         "allow_nonzero",
         "capture",
         "baseline",
+        "straggler_quantile",
     }
 )
 
@@ -188,6 +191,9 @@ class TaskSpec:
     sampling: dict[str, Any] | None = None
     timeout: float | None = None
     allow_nonzero: bool = False
+    #: straggler cutoff as a runtime quantile (e.g. 0.9 or "p90") —
+    #: replaces the default ``straggler_factor × median`` rule
+    straggler_quantile: float | None = None
     #: metric name → CaptureSpec (declarative result extraction)
     capture: dict[str, Any] = dataclasses.field(default_factory=dict)
     #: reference parameter point for speedup/efficiency derivation
@@ -308,6 +314,22 @@ def _parse_task(name: str, body: Mapping[str, Any]) -> TaskSpec:
             spec.allow_nonzero = (
                 val if isinstance(val, bool)
                 else str(val).strip().lower() in ("1", "true", "yes", "on"))
+        elif kw == "straggler_quantile":
+            txt = str(val).strip().lower()
+            try:
+                # "p90"/"P99" shorthand or a plain fraction like 0.9
+                q = float(txt[1:]) / 100.0 if txt.startswith("p") \
+                    else float(txt)
+            except (TypeError, ValueError) as e:
+                raise WDLError(
+                    f"task {name!r}: straggler_quantile must be a "
+                    f"fraction in (0, 1) or 'pNN' (e.g. p90), "
+                    f"got {val!r}") from e
+            if not 0.0 < q < 1.0:
+                raise WDLError(
+                    f"task {name!r}: straggler_quantile must be in "
+                    f"(0, 1), got {q!r}")
+            spec.straggler_quantile = q
         elif kw == "capture":
             from .results import CaptureError, parse_captures
 

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import argparse
 import csv
+import heapq
 import io
 import json
 import sys
@@ -66,12 +67,28 @@ def records_path(path: "str | Path") -> Path:
 
 
 def iter_records(path: "str | Path") -> Iterator[dict[str, Any]]:
-    """Stream provenance records from disk, skipping blank lines."""
-    with records_path(path).open() as f:
-        for line in f:
-            line = line.strip()
-            if line:
-                yield json.loads(line)
+    """Stream provenance records from disk, skipping blank lines.
+
+    A sharded run leaves per-shard segments (``records.jsonl.s<k>``)
+    next to the base file; they are k-way-merged back into one
+    timestamp-ordered stream, so offline reports see exactly what a
+    single-handle run would have written."""
+    base = records_path(path)
+    segs = sorted((p for p in base.parent.glob(base.name + ".s*")
+                   if p.name[len(base.name) + 2:].isdigit()),
+                  key=lambda p: int(p.name.rsplit(".s", 1)[1]))
+
+    def _stream(p: Path) -> Iterator[dict[str, Any]]:
+        with p.open() as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    yield json.loads(line)
+    if not segs:
+        yield from _stream(base)
+        return
+    yield from heapq.merge(*(_stream(p) for p in [base] + segs),
+                           key=lambda r: r.get("timestamp") or 0.0)
 
 
 def aggregate_records(

@@ -64,6 +64,17 @@ def _train_combo(combo: dict[str, Any], defaults: dict[str, Any]) -> float:
     return train_members([args])[0]
 
 
+def _window_arg(text: str) -> Any:
+    """``--window`` accepts a positive int or the literal ``auto``."""
+    if text.strip().lower() == "auto":
+        return "auto"
+    try:
+        return int(text)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"window must be a positive int or 'auto', got {text!r}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("paramfile", nargs="+")
@@ -95,11 +106,19 @@ def main() -> None:
                          "'scheduler' = real sbatch/qsub")
     ap.add_argument("--speculate", action="store_true",
                     help="duplicate straggler tasks (idempotent tasks only)")
-    ap.add_argument("--window", type=int, default=None,
+    ap.add_argument("--window", type=_window_arg, default=None,
                     help="streaming admission: keep at most slots+WINDOW "
                          "task nodes live, address instances by index "
                          "instead of materializing the space, and journal "
-                         "in compact v2 form (default: eager whole-DAG)")
+                         "in compact v2 form; 'auto' sizes the window "
+                         "from the observed completion rate (default: "
+                         "eager whole-DAG)")
+    ap.add_argument("--straggler-quantile", type=float, default=None,
+                    metavar="Q",
+                    help="straggler cutoff as a runtime quantile in "
+                         "(0, 1), e.g. 0.9 for p90 — replaces the "
+                         "default straggler_factor x median rule "
+                         "(default: the WDL straggler_quantile: keyword)")
     ap.add_argument("--report", choices=report_mod.REPORTS, default=None,
                     help="aggregate captured metrics while the study "
                          "streams and print this pivot table at the end "
@@ -160,6 +179,9 @@ def main() -> None:
                 counts["ok"] += 1
         extra_kwargs = dict(aggregator=aggregator, on_result=_count,
                             keep_results=False)
+
+    if args.straggler_quantile is not None:
+        extra_kwargs["straggler_quantile"] = args.straggler_quantile
 
     if args.gang:
         def gang_runner(nodes):

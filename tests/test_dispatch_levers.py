@@ -1,0 +1,285 @@
+"""Dispatch-throughput levers (the 10^4 tasks/s path).
+
+Covers the four levers end to end at the unit/wiring level: adaptive
+batch sizing (duration-driven chunk caps), spawn elimination
+(``posix_spawn`` vs ``Popen`` parity), the ``straggler_quantile`` WDL
+keyword / run parameter, and ``run(window="auto")`` adaptive streaming
+admission.  Throughput itself is measured by
+``benchmarks/engine_overhead.py``; these tests pin semantics.
+"""
+import subprocess
+
+import pytest
+
+from repro.core import (
+    LaneWorkerPool, ParameterStudy, Scheduler, parse_yaml, run_subprocess,
+)
+from repro.core.executors import _HAS_POSIX_SPAWN
+from repro.core.scheduler import AdaptiveWindow
+from repro.core.wdl import WDLError
+
+WDL = """
+sweep:
+  args:
+    n: [1, 2, 3, 4, 5, 6]
+  command: echo v-${args:n}
+"""
+
+
+# ---------------------------------------------------------------------------
+# straggler_quantile: WDL keyword → scheduler wiring
+# ---------------------------------------------------------------------------
+
+
+class TestStragglerQuantile:
+    def _spec(self, q):
+        return parse_yaml(f"""
+t:
+  args:
+    x: [1, 2]
+  straggler_quantile: {q}
+  command: echo ${{args:x}}
+""")
+
+    def test_wdl_pq_form(self):
+        assert self._spec("p90").tasks["t"].straggler_quantile == 0.9
+
+    def test_wdl_float_form(self):
+        assert self._spec("0.75").tasks["t"].straggler_quantile == 0.75
+
+    @pytest.mark.parametrize("bad", ["p200", "frog", "1.5", "0", "p0"])
+    def test_wdl_invalid_rejected(self, bad):
+        with pytest.raises(WDLError, match="straggler_quantile"):
+            self._spec(bad)
+
+    def test_scheduler_validates_range(self):
+        with pytest.raises(ValueError, match="straggler_quantile"):
+            Scheduler(straggler_quantile=1.5)
+        assert Scheduler(straggler_quantile=0.9).straggler_quantile == 0.9
+
+    def test_run_forwards_spec_keyword(self, tmp_path, monkeypatch):
+        seen = {}
+        orig = Scheduler.__init__
+
+        def spy(self, *a, **kw):
+            seen["q"] = kw.get("straggler_quantile")
+            return orig(self, *a, **kw)
+
+        monkeypatch.setattr(Scheduler, "__init__", spy)
+        study = ParameterStudy(self._spec("p90"), root=tmp_path, name="sq")
+        study.run(runner=lambda n: 0)
+        assert seen["q"] == 0.9
+
+    def test_run_param_overrides_spec(self, tmp_path, monkeypatch):
+        seen = {}
+        orig = Scheduler.__init__
+
+        def spy(self, *a, **kw):
+            seen["q"] = kw.get("straggler_quantile")
+            return orig(self, *a, **kw)
+
+        monkeypatch.setattr(Scheduler, "__init__", spy)
+        study = ParameterStudy(self._spec("p90"), root=tmp_path, name="sq2")
+        study.run(runner=lambda n: 0, straggler_quantile=0.5, window=2)
+        assert seen["q"] == 0.5
+
+    def test_conflicting_task_keywords_rejected(self, tmp_path):
+        spec = parse_yaml("""
+a:
+  args:
+    x: [1]
+  straggler_quantile: p90
+  command: echo a
+b:
+  args:
+    x: [1]
+  straggler_quantile: p50
+  command: echo b
+""")
+        study = ParameterStudy(spec, root=tmp_path, name="conf")
+        with pytest.raises(ValueError, match="straggler_quantile"):
+            study.run(runner=lambda n: 0)
+
+
+# ---------------------------------------------------------------------------
+# window="auto": rate-driven streaming admission
+# ---------------------------------------------------------------------------
+
+
+class TestAdaptiveWindowUnit:
+    def test_grows_with_fast_completions(self):
+        w = AdaptiveWindow(slots=2, horizon=0.5)
+        w.observe(0.0, 0)
+        before = w.current
+        w.observe(0.25, 500)    # 2000 tasks/s → target 1000
+        assert w.current > before
+        w.observe(0.5, 1000)
+        assert w.current <= w.max
+
+    def test_shrinks_for_slow_studies(self):
+        w = AdaptiveWindow(slots=2, horizon=0.5)
+        w.current = 512
+        w.observe(0.0, 0)
+        w.observe(1.0, 2)       # 2 tasks/s → target 1
+        assert w.current < 512
+        for i in range(2, 12):
+            w.observe(float(i), 2 * i)
+        assert w.current == w.min   # converges to the floor
+
+    def test_clamped_to_bounds(self):
+        w = AdaptiveWindow(slots=4, max_window=64)
+        w.observe(0.0, 0)
+        for i in range(1, 10):
+            w.observe(i * 0.25, i * 100_000)
+        assert w.current == 64
+        assert w.min == 4
+
+
+class TestWindowAutoRun:
+    def test_auto_window_completes_and_reports_int(self, tmp_path):
+        study = ParameterStudy(parse_yaml(WDL), root=tmp_path, name="wa")
+        res = study.run(window="auto", runner=lambda n: 0)
+        assert len(res) == 6
+        assert all(r.status == "ok" for r in res.values())
+        assert isinstance(study.last_run_stats["window"], int)
+
+    def test_auto_window_resumes(self, tmp_path):
+        class Stop(Exception):
+            pass
+
+        seen = []
+
+        def tripwire(res):
+            seen.append(res.id)
+            if len(seen) == 3:
+                raise Stop
+
+        study = ParameterStudy(parse_yaml(WDL), root=tmp_path, name="war")
+        with pytest.raises(Stop):
+            study.run(window="auto", runner=lambda n: 0, on_result=tripwire)
+        resumed = ParameterStudy(parse_yaml(WDL), root=tmp_path, name="war")
+        resumed.run(window="auto", resume=True, runner=lambda n: 0)
+        assert resumed.last_run_stats["skipped_complete"] == 3
+
+    def test_bad_window_string_rejected(self, tmp_path):
+        study = ParameterStudy(parse_yaml(WDL), root=tmp_path, name="wb")
+        with pytest.raises(ValueError, match="window"):
+            study.run(window="turbo", runner=lambda n: 0)
+
+
+# ---------------------------------------------------------------------------
+# spawn elimination: posix_spawn fast path vs subprocess.run
+# ---------------------------------------------------------------------------
+
+posix_only = pytest.mark.skipif(not _HAS_POSIX_SPAWN,
+                                reason="posix_spawnp unavailable")
+
+
+class TestSpawnPaths:
+    @posix_only
+    def test_paths_agree_on_stdout_stderr_rc(self):
+        cmd = "echo out; echo err >&2; exit 4"
+        a = run_subprocess(cmd, shell=True, spawn="posix")
+        b = run_subprocess(cmd, shell=True, spawn="popen")
+        assert (a.returncode, a.stdout, a.stderr) \
+            == (b.returncode, b.stdout, b.stderr) == (4, "out\n", "err\n")
+
+    @posix_only
+    def test_posix_env_overlay(self):
+        r = run_subprocess("echo $PAPAS_LEVER", shell=True, spawn="posix",
+                           env={"PAPAS_LEVER": "d"})
+        assert r.ok and r.stdout == "d\n"
+
+    @posix_only
+    def test_posix_timeout_matches_popen_contract(self):
+        with pytest.raises(subprocess.TimeoutExpired):
+            run_subprocess("sleep 30", shell=True, spawn="posix",
+                           timeout=0.2)
+
+    def test_missing_binary_raises_either_path(self):
+        for spawn in (("posix",) if _HAS_POSIX_SPAWN else ()) + ("popen",):
+            with pytest.raises(FileNotFoundError):
+                run_subprocess("papas_no_such_binary_xyz", spawn=spawn)
+
+    def test_cwd_falls_back_to_popen(self, tmp_path):
+        # posix_spawn has no portable chdir file action: auto must fall
+        # back, and forcing posix with cwd is an explicit error
+        r = run_subprocess("pwd", shell=True, cwd=str(tmp_path))
+        assert r.ok and r.stdout.strip() == str(tmp_path)
+        with pytest.raises(RuntimeError, match="posix spawn"):
+            run_subprocess("pwd", shell=True, cwd=str(tmp_path),
+                           spawn="posix")
+
+    @posix_only
+    def test_large_capture_drains_both_pipes(self):
+        # both pipes carry more than one pipe buffer: the select loop
+        # must interleave reads, never deadlock on a full pipe
+        n = 30_000
+        r = run_subprocess(f"seq 1 {n}; seq 1 {n} >&2", shell=True,
+                           spawn="posix")
+        expected = "".join(f"{i}\n" for i in range(1, n + 1))
+        assert r.ok and r.stdout == expected and r.stderr == expected
+
+
+# ---------------------------------------------------------------------------
+# adaptive batch sizing
+# ---------------------------------------------------------------------------
+
+
+def _payload_render(node):
+    return node.payload.get("command"), node.payload.get("env") or {}
+
+
+class TestAdaptiveBatch:
+    def _fed(self, durations, **kw):
+        pool = LaneWorkerPool(1, render=_payload_render, **kw)
+        for d in durations:
+            pool._observe(d)
+        return pool
+
+    def test_warmup_before_enough_samples(self):
+        pool = LaneWorkerPool(1, render=_payload_render)
+        try:
+            assert pool._batch_now() == pool.WARMUP_BATCH
+        finally:
+            pool.shutdown()
+
+    def test_cheap_tasks_grow_the_batch(self):
+        pool = self._fed([0.001] * 16)
+        try:
+            # ~BATCH_LATENCY/median, clamped
+            assert pool._batch_now() == min(pool.MAX_BATCH,
+                                            int(pool.BATCH_LATENCY / 0.001))
+        finally:
+            pool.shutdown()
+
+    def test_straggler_pressure_shrinks_the_batch(self):
+        # p90 >> median: worst-case batch latency bounds the size
+        pool = self._fed([0.001] * 20 + [1.0] * 4)
+        try:
+            assert pool._batch_now() == 1
+        finally:
+            pool.shutdown()
+
+    def test_pinned_batch_ignores_observations(self):
+        pool = self._fed([0.001] * 32, batch=4)
+        try:
+            assert pool._batch_now() == 4
+        finally:
+            pool.shutdown()
+
+    def test_invalid_batch_rejected(self):
+        for bad in (0, -1, "turbo", 2.5, True):
+            with pytest.raises(ValueError, match="batch"):
+                LaneWorkerPool(1, batch=bad)
+
+    def test_auto_batch_end_to_end(self, tmp_path):
+        study = ParameterStudy(parse_yaml("""
+sweep:
+  args:
+    n: ["1:40"]
+  command: echo v-${args:n}
+"""), root=tmp_path, name="ab")
+        res = study.run(pool="lane", slots=2)   # batch defaults to auto
+        assert len(res) == 40
+        assert all(r.status == "ok" for r in res.values())

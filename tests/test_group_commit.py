@@ -93,6 +93,101 @@ class TestDBBatching:
         assert db.records_path.exists()
 
 
+class TestSharding:
+    """Sharded group commit: the stream splits over per-shard append
+    segments (base + ``.s<k>``); readers union whatever exists on disk,
+    so any shard layout folds back to the single-handle state."""
+
+    def test_round_robin_over_segments(self, tmp_path):
+        from repro.core.groupcommit import ShardedGroupCommit
+        w = ShardedGroupCommit(tmp_path / "j.log", shards=3)
+        for i in range(7):
+            w.append(f"{i}\n")
+        assert w.n_appends == 7
+        paths = w.segment_paths()
+        assert [p.name for p in paths] == ["j.log", "j.log.s1", "j.log.s2"]
+        assert paths[0].read_text() == "0\n3\n6\n"
+        assert paths[1].read_text() == "1\n4\n"
+        assert paths[2].read_text() == "2\n5\n"
+
+    def test_segment_glob_ignores_foreign_files(self, tmp_path):
+        from repro.core.groupcommit import ShardedGroupCommit
+        w = ShardedGroupCommit(tmp_path / "j.log", shards=2)
+        w.append("a\n")
+        w.append("b\n")
+        # non-segment neighbors must not be swept into the union
+        (tmp_path / "j.log.sx").write_text("junk\n")
+        (tmp_path / "j.log.s1.bak").write_text("junk\n")
+        assert [p.name for p in w.segment_paths()] == ["j.log", "j.log.s1"]
+
+    def test_set_shards_flushes_dropped_writers(self, tmp_path):
+        from repro.core.groupcommit import ShardedGroupCommit
+        w = ShardedGroupCommit(tmp_path / "j.log", flush_count=100,
+                               shards=3)
+        for i in range(3):
+            w.append(f"{i}\n")      # one buffered line per shard
+        w.set_shards(1)             # dropped shards must flush, not lose
+        on_disk = "".join(p.read_text() for p in w.segment_paths())
+        union = sorted(on_disk.splitlines() + w.pending())
+        assert [s.strip() for s in union] == ["0", "1", "2"]
+
+    def test_journal_sharded_crash_resume_matches_single_handle(
+            self, tmp_path):
+        """Kill before compaction with 3 shards; a fresh (default,
+        single-shard) journal must fold every segment to the same state
+        a single-handle journal reaches."""
+        sharded = StudyJournal(tmp_path / "a.json", shards=3)
+        single = StudyJournal(tmp_path / "b.json")
+        for j in (sharded, single):
+            j.save_indexed("h", 8, {}, {})      # v2 base, no completions
+        for i in range(8):
+            for j in (sharded, single):
+                j.mark_complete(f"w@{i}", host=f"h{i % 2}", index=i,
+                                task="w")
+        sharded.close()
+        assert (tmp_path / "a.json.log.s2").exists()
+        # fresh objects ≈ restarted process after a crash
+        sa = StudyJournal(tmp_path / "a.json").load_state()
+        sb = StudyJournal(tmp_path / "b.json").load_state()
+        assert sa.completed == sb.completed == {f"w@{i}" for i in range(8)}
+        assert sa.completed_indices == sb.completed_indices \
+            == {"w": set(range(8))}
+        assert sa.hosts == sb.hosts
+
+    def test_journal_compaction_unlinks_all_segments(self, tmp_path):
+        j = StudyJournal(tmp_path / "j.json", shards=2)
+        for i in range(4):
+            j.mark_complete(f"w@{i}", index=i, task="w")
+        assert (tmp_path / "j.json.log.s1").exists()
+        j.save_indexed("h", 4, {"w": {0, 1, 2, 3}}, {})
+        assert not j.log_path.exists()
+        assert not (tmp_path / "j.json.log.s1").exists()
+        assert StudyJournal(tmp_path / "j.json").load_state() \
+            .completed_indices == {"w": {0, 1, 2, 3}}
+
+    def test_db_sharded_records_merge_by_timestamp(self, tmp_path):
+        db = StudyDB(tmp_path, "sh", shards=3)
+        for i in range(9):
+            db.record(f"t@{i}", "ok", 0.1, index=i)
+        recs = list(db.records())
+        assert {r["task_id"] for r in recs} == {f"t@{i}" for i in range(9)}
+        stamps = [r["timestamp"] for r in recs]
+        assert stamps == sorted(stamps)     # merged stream stays ordered
+        assert db.completed_indices() == {"t": set(range(9))}
+
+    def test_db_latest_record_wins_across_segments(self, tmp_path):
+        # a failed attempt and its later retry land on different shards;
+        # latest-wins must survive the merge
+        db = StudyDB(tmp_path, "rw", shards=2)
+        db.record("t@0", "failed", 0.1, error="flaky")
+        db.record("t@0", "ok", 0.1)
+        assert db.completed_ids() == {"t@0"}
+        by_id = {}
+        for r in db.records():              # last occurrence wins
+            by_id[r["task_id"]] = r
+        assert by_id["t@0"]["status"] == "ok"
+
+
 class _Bomb(Exception):
     pass
 

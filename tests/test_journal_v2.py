@@ -211,6 +211,92 @@ work:
             changed.run(resume=True)
 
 
+class TestShardedResume:
+    """Crash/resume with the sharded journal+DB layout the engine picks
+    for parallel pools (lane/process, slots > 1)."""
+
+    SH_SPEC = """
+sh:
+  args:
+    n: [1, 2, 3, 4, 5, 6]
+  command: echo v-${args:n}
+"""
+
+    def test_lane_crash_with_shards_resumes_merged(self, tmp_path):
+        """A lane run (slots=2 → 2 journal/DB shards) interrupted
+        mid-study leaves per-shard segments on disk; a fresh resume —
+        on a different, unsharded backend — folds every segment and
+        re-admits only the remainder."""
+        class Stop(Exception):
+            pass
+
+        seen = []
+
+        def tripwire(res):
+            seen.append(res.id)
+            if len(seen) == 3:
+                raise Stop
+
+        study = ParameterStudy(parse_yaml(self.SH_SPEC), root=tmp_path,
+                               name="shcrash")
+        with pytest.raises(Stop):
+            study.run(pool="lane", slots=2, window=1, on_result=tripwire)
+        # the sharded layout is actually on disk (no final compaction)
+        log = study.journal.log_path
+        assert log.with_name(log.name + ".s1").exists()
+        done_before = len(
+            StudyJournal(study.journal.path).load_state()
+            .completed_indices["sh"])
+        assert done_before >= 3
+
+        resumed = ParameterStudy(parse_yaml(self.SH_SPEC), root=tmp_path,
+                                 name="shcrash")
+        res = resumed.run(window=2, resume=True)    # inline: one shard
+        assert all(r.status == "ok" for r in res.values())
+        assert resumed.last_run_stats["skipped_complete"] == done_before
+        final = resumed.journal.load_state()
+        assert len(final.completed_indices["sh"]) == 6
+        # compaction folded and removed every segment
+        assert not log.exists()
+        assert not log.with_name(log.name + ".s1").exists()
+        # provenance: sharded + resumed record segments merge to the
+        # full set with latest-wins intact
+        assert resumed.db.completed_indices()["sh"] == set(range(6))
+
+    def test_v1_journal_migrates_to_sharded_v2(self, tmp_path):
+        """v1 → v2 migration composes with sharding: an eager (v1)
+        study interrupted mid-run resumes through the windowed engine on
+        a sharded lane backend and compacts to a clean v2 base."""
+        class Stop(Exception):
+            pass
+
+        seen = []
+
+        def tripwire(res):
+            seen.append(res.id)
+            if len(seen) == 3:
+                raise Stop
+
+        study = ParameterStudy(parse_yaml(self.SH_SPEC), root=tmp_path,
+                               name="shmig")
+        with pytest.raises(Stop):
+            study.run(on_result=tripwire)       # eager path: v1 journal
+        assert json.loads(study.journal.path.read_text())["version"] == 1
+
+        resumed = ParameterStudy(parse_yaml(self.SH_SPEC), root=tmp_path,
+                                 name="shmig")
+        res = resumed.run(pool="lane", slots=2, window=2, resume=True)
+        assert all(r.status == "ok" for r in res.values())
+        assert resumed.last_run_stats["skipped_complete"] == 3
+        doc = json.loads(resumed.journal.path.read_text())
+        assert doc["version"] == 2
+        assert doc["completed"]["sh"] == [[0, 5]]
+        # no sidecar segments survive the final compaction
+        log = resumed.journal.log_path
+        assert not log.exists()
+        assert not log.with_name(log.name + ".s1").exists()
+
+
 class TestResumeAcrossPools:
     SH_SPEC = """
 sh:

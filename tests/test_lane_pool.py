@@ -148,6 +148,98 @@ class TestTimeoutAndRecovery:
         assert res["next"].status == "ok"
 
 
+class TestFrameReassembly:
+    """Split-sentinel / slow-writer regressions.  The mux reads lane
+    stdout in 64 KB chunks, so frames routinely arrive fragmented (large
+    outputs), coalesced (many tiny outputs in one read), or with the rc
+    sentinel itself straddling two reads.  None of that may mis-frame a
+    result."""
+
+    def test_large_output_fragments_across_reads(self):
+        # ~260 KB of stdout: several pipe reads per frame, the sentinel
+        # lands in the final fragment
+        n = 40_000
+        dag = _dag([f"seq 1 {n}"])
+        pool = LaneWorkerPool(1, render=_payload_render)
+        try:
+            res = Scheduler(slots=1).execute(dag, None, pool=pool)
+        finally:
+            pool.shutdown()
+        assert res["t000"].status == "ok"
+        assert res["t000"].value.stdout == \
+            "".join(f"{i}\n" for i in range(1, n + 1))
+
+    def test_large_and_tiny_frames_interleave_in_one_batch(self):
+        # one batch mixes multi-read frames with sub-read frames on the
+        # same lane buffer
+        cmds = ["seq 1 20000", "echo tiny0", "seq 20001 40000", "echo tiny1"]
+        dag = _dag(cmds, task="t")
+        pool = LaneWorkerPool(1, render=_payload_render, batch=4)
+        try:
+            res = Scheduler(slots=1).execute(dag, None, pool=pool)
+        finally:
+            pool.shutdown()
+        assert all(r.status == "ok" for r in res.values())
+        assert res["t000"].value.stdout == \
+            "".join(f"{i}\n" for i in range(1, 20001))
+        assert res["t001"].value.stdout == "tiny0\n"
+        assert res["t002"].value.stdout == \
+            "".join(f"{i}\n" for i in range(20001, 40001))
+        assert res["t003"].value.stdout == "tiny1\n"
+        assert pool.stats.dispatches == 1       # one pipe-fed batch
+
+    def test_slow_writer_dribbles_partial_frames(self):
+        # a scripted slow writer: output (and eventually the sentinel)
+        # arrives across multiple reads separated by real time — the
+        # partial frame must buffer, never parse early
+        dag = _dag(["sh -c 'printf alpha; sleep 0.4; printf beta'",
+                    "echo after"])
+        pool = LaneWorkerPool(1, render=_payload_render, batch=2)
+        try:
+            res = Scheduler(slots=1).execute(dag, None, pool=pool)
+        finally:
+            pool.shutdown()
+        assert res["t000"].status == "ok"
+        assert res["t000"].value.stdout == "alphabeta"
+        assert res["t001"].value.stdout == "after\n"
+
+    def test_lane_crash_mid_batch_charges_head_and_recovers(self):
+        # scripted lane death: the middle command kills its own worker
+        # shell (stdout EOF, no sentinel).  Exactly the command at the
+        # read head is charged; completed frames keep their results and
+        # the remainder reruns on the respawned lane.
+        dag = _dag(["echo pre", "kill -9 $$", "echo post"])
+        pool = LaneWorkerPool(1, render=_payload_render, batch=3)
+        try:
+            res = Scheduler(slots=1, max_retries=0).execute(dag, None,
+                                                            pool=pool)
+        finally:
+            pool.shutdown()
+        assert res["t000"].status == "ok"
+        assert res["t000"].value.stdout == "pre\n"
+        assert res["t001"].status == "failed"
+        assert "lane worker exited" in res["t001"].error
+        assert res["t002"].status == "ok"
+        assert res["t002"].value.stdout == "post\n"
+        assert pool.stats.respawns >= 2         # initial spawn + recovery
+
+    def test_repeated_lane_death_fails_batch_not_pool(self):
+        # a command that always kills its lane: the stall counter stops
+        # the respawn loop and fails the survivors instead of spinning
+        dag = _dag(["kill -9 $$"])
+        pool = LaneWorkerPool(1, render=_payload_render, batch=1)
+        try:
+            res = Scheduler(slots=1, max_retries=0).execute(dag, None,
+                                                            pool=pool)
+            assert res["t000"].status == "failed"
+            # the pool is still serviceable after the death loop
+            dag2 = _dag(["echo alive"], task="u")
+            res2 = Scheduler(slots=1).execute(dag2, None, pool=pool)
+            assert res2["u000"].value.stdout == "alive\n"
+        finally:
+            pool.shutdown()
+
+
 class TestStudyIntegration:
     WDL = """
 sweep:
