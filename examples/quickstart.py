@@ -195,6 +195,74 @@ def run_perf_report(window: int = 16, slots: int = 2) -> None:
           f"offline table reproduces the live one")
 
 
+# lint smoke: a study seeded with one of every static-defect class the
+# analyzer must catch — never runnable, only linted
+BROKEN_WDL = """
+prep:
+  command: "gen --n ${args:sizee} > series.dat"
+  args:
+    size: ["16:*2:64"]
+  after: [ghost]
+  timeout: 3600
+crunch:
+  command: "crunch ${args:size}"
+  after: [report]
+  infiles:
+    series: "series_${prep:args:size}.dat"
+  capture:
+    gflops:
+      regex: "gflops=([0-9.]+)"
+      source: "outfile:missing"
+  baseline:
+    size: 999
+report:
+  command: "report"
+  after: [crunch]
+"""
+
+#: rule ids the broken study must trip (one per seeded defect class)
+EXPECTED_BROKEN_RULES = {
+    "E101",   # ${args:sizee} typo
+    "E201",   # after: ghost
+    "E202",   # crunch <-> report cycle
+    "E301",   # parameterized infile with no producer
+    "E403",   # capture reads undeclared outfile
+    "E501",   # baseline key resolves to nothing at crunch
+}
+
+
+def run_lint() -> None:
+    """Lint smoke: the clean example must produce zero findings, the
+    seeded-defect study must trip every expected rule id — through the
+    real CLI formatters (text and JSON), exercising the report path
+    end to end."""
+    import json as json_mod
+
+    from repro.launch.lint import lint_file, render_json, render_text
+
+    clean_path = Path(__file__).parent / "matmul_perf.yaml"
+    clean = lint_file(clean_path)
+    broken = _lint_broken()
+    reports = {str(clean_path): clean, "<broken>": broken}
+    print(render_text(reports))
+    doc = json_mod.loads(render_json(reports))
+    assert clean.ok and not clean.errors, \
+        "lint smoke: the shipped example must lint clean"
+    got = {f.rule for f in broken.findings}
+    missing = EXPECTED_BROKEN_RULES - got
+    assert not missing, f"lint smoke: rules not tripped: {sorted(missing)}"
+    assert doc["ok"] is False and not doc["files"][str(clean_path)]["findings"], \
+        "lint smoke: JSON report diverges from text verdicts"
+    print(f"[lint] clean example clean; broken study tripped "
+          f"{sorted(got & EXPECTED_BROKEN_RULES)}")
+
+
+def _lint_broken():
+    from repro.core.lint import lint as lint_spec
+
+    return lint_spec(parse_yaml(BROKEN_WDL, validate=False))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--pool", default="inline",
@@ -208,7 +276,14 @@ def main():
                     help="run the matmul performance-study smoke "
                          "(capture + streaming aggregation + speedup "
                          "table, live and offline)")
+    ap.add_argument("--lint", action="store_true",
+                    help="run the static-analysis smoke (clean example "
+                         "+ seeded-defect study through the findings "
+                         "formatters)")
     args = ap.parse_args()
+    if args.lint:
+        run_lint()
+        return
     if args.report:
         run_perf_report()
         return

@@ -33,6 +33,57 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
     tests/test_results.py tests/test_report.py tests/test_viz.py
 
+# static analysis: the lint rule pack, its property harness (skips
+# without hypothesis), and the lock auditor — pinned by name
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+    tests/test_lint.py tests/test_lint_props.py tests/test_locklint.py
+
+# lint gate, positive half: every shipped example must lint clean even
+# under --strict (zero findings is what keeps the gate honest)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.lint \
+    examples/*.yaml --strict
+
+# lint gate, negative half: the seeded-defect fixture must exit 1 and
+# flag every planted rule id — a lint that stops seeing defects is as
+# broken as one that invents them
+if PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.lint \
+    tests/fixtures/broken_study.yaml --format json > /tmp/papas_lint.json
+then
+    echo "lint gate: broken fixture unexpectedly passed" >&2
+    exit 1
+fi
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+import json
+doc = json.load(open("/tmp/papas_lint.json"))
+(rep,) = doc["files"].values()
+ids = {f["rule"] for f in rep["findings"]}
+want = {"E101", "E201", "E202", "E203", "E301", "E403", "E502", "W601"}
+missing = want - ids
+assert not missing, f"lint gate: fixture rules not flagged: {sorted(missing)}"
+print(f"lint gate: fixture flagged {len(want)} seeded rule id(s)")
+EOF
+
+# lint smoke through the example driver: clean + broken studies through
+# the same code path sweep.py --check runs (text and JSON renderers)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py \
+    --lint
+
+# engine concurrency smoke: run the lane-mux and group-commit suites
+# under instrumented locks and fail the gate on any acquisition-order
+# cycle (a potential deadlock that only load would surface)
+PAPAS_LOCKLINT=1 PAPAS_LOCKLINT_OUT=/tmp/papas_locklint.json \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+    tests/test_lane_pool.py tests/test_group_commit.py
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+import json
+from repro.core.lint import findings_from_lock_report
+report = json.load(open("/tmp/papas_locklint.json"))
+assert report["locks"], "locklint smoke recorded no instrumented locks"
+verdict = findings_from_lock_report(report)
+print(verdict.render())
+assert verdict.ok, "lock acquisition-order cycle detected"
+EOF
+
 # end-to-end smoke: a study through the SSH worker pool (hosts × ppnode
 # slots, LocalTransport fake — commands run locally, no network), with
 # per-task hosts asserted in the journal by the example itself

@@ -21,12 +21,21 @@ from .interpolate import (
     CompiledEnviron,
     CompiledTemplate,
     InterpolationError,
+    classify_reference,
     compile_environ,
     compile_template,
     interpolate,
     render_command,
     render_environ,
     substitute_content,
+)
+from .lint import Finding, LintReport, Rule, RULES, lint
+from .locklint import (
+    InstrumentedLock,
+    LockOrderAuditor,
+    LockOrderError,
+    get_auditor,
+    make_lock,
 )
 from .paramspace import ParameterSpace, combo_id, from_task
 from .provenance import StudyDB, config_hash
@@ -93,8 +102,12 @@ __all__ = [
     "SchedulerSubmitter", "SSHTransport", "SSHWorkerPool", "Transport",
     "TransportError", "parse_hosts", "render_batch_script",
     "CompiledEnviron", "CompiledTemplate", "InterpolationError",
+    "classify_reference",
     "compile_environ", "compile_template", "interpolate", "render_command",
     "render_environ", "substitute_content",
+    "Finding", "LintReport", "Rule", "RULES", "lint",
+    "InstrumentedLock", "LockOrderAuditor", "LockOrderError",
+    "get_auditor", "make_lock",
     "ParameterSpace", "combo_id", "from_task",
     "StudyDB", "config_hash",
     "BUILTIN_CAPTURES", "CaptureError", "CaptureSet", "CaptureSpec",

@@ -54,6 +54,7 @@ from pathlib import Path
 from typing import Any, Callable, Hashable, Mapping, Sequence, TYPE_CHECKING
 
 from .dag import TaskNode
+from .locklint import make_lock
 
 if TYPE_CHECKING:  # pragma: no cover
     from .dag import TaskDAG
@@ -570,7 +571,7 @@ class LaneWorkerPool(WorkerPool):
         self._spool = Path(tempfile.mkdtemp(prefix="papas-lanes-"))
         self._workq: deque[tuple[int, list[TaskNode]]] = deque()
         self._events: "queue.Queue[CompletionEvent]" = queue.Queue()
-        self._lock = threading.Lock()
+        self._lock = make_lock("lane.pool")
         self._cancelled: set[int] = set()
         self._active: dict[int, subprocess.Popen] = {}  # token → lane shell
         self._gang_tokens = itertools.count(-1, -1)     # never collide with

@@ -69,6 +69,55 @@ def resolve(
     raise InterpolationError(f"cannot resolve ${{{path}}} (task={task!r})")
 
 
+def classify_reference(
+    path: str,
+    scope: "set[str] | frozenset[str]",
+    studies_scopes: Mapping[str, "set[str] | frozenset[str]"] | None = None,
+) -> tuple[str, str]:
+    """Statically classify one ``${path}`` reference against parameter
+    *key sets* instead of a concrete combination.
+
+    Mirrors :func:`resolve` exactly — same lookup order, same tie
+    rules — so ``("ok", ...)`` here means ``resolve()`` succeeds for
+    every instance, and anything else means it raises
+    :class:`InterpolationError` for every instance.  This is what lets
+    ``papas lint`` prove a 10^5-combination study renders without
+    materializing a single combo.
+
+    Returns ``(status, detail)`` with status ``"ok"``, ``"unbound"``,
+    or ``"ambiguous"`` (both non-ok states raise at runtime; the split
+    is diagnostic).
+    """
+    if path in scope:
+        return "ok", ""
+    tails = [k for k in scope if k.endswith(":" + path)]
+    if len(tails) == 1:
+        return "ok", ""
+    head, _, rest = path.partition(":")
+    if studies_scopes and head in studies_scopes and rest:
+        other = studies_scopes[head]
+        if rest in other:
+            return "ok", ""
+        otails = [k for k in other if k.endswith(":" + rest)]
+        if len(otails) == 1:
+            return "ok", ""
+        if len(otails) > 1:
+            return ("ambiguous",
+                    f"{rest!r} matches {sorted(otails)} in task {head!r}")
+        if len(tails) <= 1:
+            return ("unbound",
+                    f"task {head!r} declares no parameter {rest!r} "
+                    f"(declared: {sorted(other) or 'none'})")
+    if len(tails) > 1:
+        return ("ambiguous",
+                f"{path!r} matches multiple parameters {sorted(tails)}")
+    detail = (f"no parameter of the task matches "
+              f"(declared: {sorted(scope) or 'none'})")
+    if rest and studies_scopes is not None and head not in studies_scopes:
+        detail += f"; no task named {head!r} for an inter-task reference"
+    return "unbound", detail
+
+
 def interpolate(
     text: str,
     combo: Mapping[str, Any],

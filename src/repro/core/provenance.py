@@ -36,6 +36,7 @@ from pathlib import Path
 from typing import Any, Iterator, Mapping
 
 from .groupcommit import ShardedGroupCommit
+from .locklint import make_lock
 
 
 def config_hash(obj: Any) -> str:
@@ -55,7 +56,7 @@ class StudyDB:
         self.meta_path = self.dir / "study.json"
         self._writer = ShardedGroupCommit(self.records_path, flush_count,
                                           flush_interval, shards)
-        self._lock = threading.Lock()
+        self._lock = make_lock("studydb")
 
     def set_shards(self, shards: int) -> None:
         """Split (or re-merge) the record stream across ``shards``
@@ -76,7 +77,7 @@ class StudyDB:
 
     def __setstate__(self, state: dict) -> None:
         self.__dict__.update(state)
-        self._lock = threading.Lock()
+        self._lock = make_lock("studydb")
 
     # -- group-commit machinery ------------------------------------------
     @property

@@ -49,6 +49,7 @@ from pathlib import Path
 from typing import Any, Callable, Mapping, Sequence, TYPE_CHECKING
 
 from .dag import TaskNode
+from .locklint import make_lock
 from .executors import (
     CompletionEvent, Runner, ShellResult, WorkerPool, merged_env,
     run_subprocess,
@@ -291,7 +292,7 @@ class SSHWorkerPool(WorkerPool):
         self.cwd = cwd
         self._pending: "queue.Queue[_RemoteDispatch | None]" = queue.Queue()
         self._events: "queue.Queue[CompletionEvent]" = queue.Queue()
-        self._lock = threading.Lock()
+        self._lock = make_lock("ssh.pool")
         self._procs: dict[int, RemoteProcess] = {}
         self._cancelled: set[int] = set()
         self.dead_hosts: set[str] = set()

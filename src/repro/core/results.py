@@ -55,7 +55,16 @@ _SOURCES = ("stdout", "stderr")
 
 
 class CaptureError(ValueError):
-    """Raised on a malformed ``capture:`` declaration."""
+    """Raised on a malformed ``capture:`` declaration.
+
+    ``keyword`` carries the keyword path of the offending entry relative
+    to the task (e.g. ``capture.gflops.regex``) so parse diagnostics can
+    point at the exact WDL line (see ``WDLError.with_context``).
+    """
+
+    def __init__(self, message: str, keyword: str | None = None) -> None:
+        super().__init__(message)
+        self.keyword = keyword
 
 
 def infer_scalar(text: str) -> Any:
@@ -123,45 +132,48 @@ def parse_capture(task: str, name: str, raw: Any) -> CaptureSpec:
     ``source:``, ``required:``, ``type:``, ``group:``.
     """
     where = f"task {task!r}: capture {name!r}"
+    kwpath = f"capture.{name}"
     if isinstance(raw, str):
         if raw in BUILTIN_CAPTURES:
             return CaptureSpec(name=name, kind="builtin", path=raw)
         return CaptureSpec(name=name, kind="regex",
-                           pattern=_compile(where, raw))
+                           pattern=_compile(where, raw, kwpath))
     if not isinstance(raw, Mapping):
         raise CaptureError(
             f"{where}: entry must be a string (regex or builtin name) "
-            f"or a mapping, got {type(raw).__name__}")
+            f"or a mapping, got {type(raw).__name__}", kwpath)
     body = {str(k): v for k, v in raw.items()}
     kinds = [k for k in ("regex", "json", "csv", "builtin") if k in body]
     if len(kinds) != 1:
         raise CaptureError(
             f"{where}: declare exactly one of regex/json/csv/builtin "
-            f"(got {kinds or 'none'})")
+            f"(got {kinds or 'none'})", kwpath)
     kind = kinds[0]
     extra = set(body) - {kind, "source", "required", "type", "group"}
     if extra:
         raise CaptureError(
             f"{where}: unknown key(s) {sorted(extra)} (valid: "
-            f"regex/json/csv/builtin, source, required, type, group)")
+            f"regex/json/csv/builtin, source, required, type, group)", kwpath)
     source = str(body.get("source", "stdout"))
     if kind == "builtin":
         if "source" in body:
-            raise CaptureError(f"{where}: builtin captures take no source")
+            raise CaptureError(f"{where}: builtin captures take no source",
+                               f"{kwpath}.source")
         if body["builtin"] not in BUILTIN_CAPTURES:
             raise CaptureError(
                 f"{where}: unknown builtin {body['builtin']!r} "
-                f"(valid: {', '.join(BUILTIN_CAPTURES)})")
+                f"(valid: {', '.join(BUILTIN_CAPTURES)})",
+                f"{kwpath}.builtin")
     elif source not in _SOURCES and not source.startswith(("outfile:",
                                                            "file:")):
         raise CaptureError(
             f"{where}: unknown source {source!r} (valid: stdout, stderr, "
-            f"outfile:<name>, file:<path template>)")
+            f"outfile:<name>, file:<path template>)", f"{kwpath}.source")
     cast = body.get("type")
     if cast is not None and str(cast) not in _CASTERS:
         raise CaptureError(
             f"{where}: unknown type {cast!r} "
-            f"(valid: {', '.join(sorted(_CASTERS))})")
+            f"(valid: {', '.join(sorted(_CASTERS))})", f"{kwpath}.type")
     required = body.get("required", False)
     if not isinstance(required, bool):
         required = str(required).strip().lower() in ("1", "true", "yes", "on")
@@ -169,31 +181,35 @@ def parse_capture(task: str, name: str, raw: Any) -> CaptureSpec:
     if group is not None and not isinstance(group, int):
         group = str(group)
     if kind == "regex":
-        pattern = _compile(where, str(body["regex"]))
+        pattern = _compile(where, str(body["regex"]), f"{kwpath}.regex")
     else:
         pattern = None
     path = None
     if kind in ("json", "csv", "builtin"):
         path = str(body[kind])
         if not path:
-            raise CaptureError(f"{where}: empty {kind} field path")
+            raise CaptureError(f"{where}: empty {kind} field path",
+                               f"{kwpath}.{kind}")
     return CaptureSpec(name=name, kind=kind, pattern=pattern, path=path,
                        group=group, source=source, required=required,
                        cast=str(cast) if cast is not None else None)
 
 
-def _compile(where: str, pattern: str) -> re.Pattern:
+def _compile(where: str, pattern: str,
+             keyword: str | None = None) -> re.Pattern:
     try:
         return re.compile(pattern)
     except re.error as e:
-        raise CaptureError(f"{where}: bad regex {pattern!r}: {e}") from e
+        raise CaptureError(f"{where}: bad regex {pattern!r}: {e}",
+                           keyword) from e
 
 
 def parse_captures(task: str, raw: Any) -> dict[str, CaptureSpec]:
     """Parse a whole ``capture:`` block (metric name → spec)."""
     if not isinstance(raw, Mapping):
         raise CaptureError(
-            f"task {task!r}: capture must be a mapping of metric names")
+            f"task {task!r}: capture must be a mapping of metric names",
+            "capture")
     return {str(name): parse_capture(task, str(name), val)
             for name, val in raw.items()}
 

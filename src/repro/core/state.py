@@ -63,6 +63,7 @@ from pathlib import Path
 from typing import Any, Iterable, Iterator, Mapping
 
 from .groupcommit import ShardedGroupCommit
+from .locklint import make_lock
 
 
 def compress_ranges(indices: Iterable[int]) -> list[list[int]]:
@@ -112,7 +113,7 @@ class StudyJournal:
         self._writer = ShardedGroupCommit(self.log_path, flush_count,
                                           flush_interval, shards)
         self._base_known = False    # base existence verified (skip stats)
-        self._lock = threading.Lock()
+        self._lock = make_lock("journal")
 
     def set_shards(self, shards: int) -> None:
         """Split (or re-merge) the sidecar log across ``shards`` append
@@ -136,7 +137,7 @@ class StudyJournal:
 
     def __setstate__(self, state: dict) -> None:
         self.__dict__.update(state)
-        self._lock = threading.Lock()
+        self._lock = make_lock("journal")
 
     # -- group-commit machinery ------------------------------------------
     @property

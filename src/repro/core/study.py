@@ -171,6 +171,33 @@ class ParameterStudy:
         materialized; prefer ``iter_instances`` for large spaces."""
         return self.space().sample()
 
+    # -- static analysis ---------------------------------------------------
+    def lint(self, slots: int | None = None,
+             max_runtime_days: float | None = None) -> Any:
+        """Pre-flight static analysis (``repro.core.lint`` rule pack).
+
+        Cost-estimator priors are this study's own observed median
+        runtimes per task (from provenance records of earlier runs),
+        falling back to each task's declared ``timeout:`` — so a
+        re-lint after a partial run prices the sweep from real data.
+        Index math only; never materializes an instance."""
+        from .lint import lint as lint_spec
+
+        samples: dict[str, list[float]] = {}
+        try:
+            for rec in self.db.records():
+                if rec.get("status") != "ok":
+                    continue
+                tname = str(rec.get("task_id", "")).split("@", 1)[0]
+                rt = rec.get("runtime")
+                if tname and isinstance(rt, (int, float)):
+                    samples.setdefault(tname, []).append(float(rt))
+        except Exception:        # unreadable records never block linting
+            samples = {}
+        priors = {t: sorted(v)[len(v) // 2] for t, v in samples.items()}
+        return lint_spec(self.spec, slots=slots, priors=priors,
+                         max_runtime_days=max_runtime_days)
+
     # -- DAG construction ---------------------------------------------------
     def _instance_nodes(self, combo: Mapping[str, Any],
                         index: int | None = None) -> list[TaskNode]:

@@ -30,6 +30,19 @@ output: a regex string, or a mapping with exactly one of
 speedup/efficiency metrics, e.g. ``baseline: {threads: 1}``).  Anything
 else is a user-defined keyword usable in interpolations (e.g. ``args``
 in the paper's Fig. 5).
+
+One top-level section name is reserved for the framework: ``lint:`` is
+not a task but the study-local static-analysis policy consumed by
+``papas lint`` / ``sweep --check`` (see ``repro.core.lint``)::
+
+    lint:
+      suppress: [W601, E302]   # rule ids to silence for this study
+      max_runtime_days: 90     # cost-estimate budget (default 30)
+      slots: 16                # assumed concurrency for the estimate
+
+Parse diagnostics are structured: every :class:`WDLError` carries the
+task name, the dotted keyword path (``matmul.capture.gflops.regex``),
+and the source file/line when parsed from YAML/INI.
 """
 from __future__ import annotations
 
@@ -76,7 +89,58 @@ _RANGE_RE = re.compile(
 
 
 class WDLError(ValueError):
-    """Raised on malformed workflow description input."""
+    """Raised on malformed workflow description input.
+
+    Every diagnostic carries structured context — ``task`` (the task
+    section it arose in), ``keyword`` (the dotted keyword path inside
+    the task, e.g. ``capture.gflops.regex``), and ``file``/``line``
+    (the source location when parsed from YAML/INI) — so tools like
+    ``papas lint`` can point at the exact declaration.  ``str()``
+    prefixes whatever context is known::
+
+        study.yaml:12: matmul.capture.gflops.regex: bad regex ...
+    """
+
+    def __init__(self, message: str, *, task: str | None = None,
+                 keyword: str | None = None, file: str | None = None,
+                 line: int | None = None) -> None:
+        super().__init__(message)
+        self.message = message
+        self.task = task
+        self.keyword = keyword
+        self.file = file
+        self.line = line
+
+    def with_context(self, *, task: str | None = None,
+                     keyword: str | None = None, file: str | None = None,
+                     line: int | None = None) -> "WDLError":
+        """Fill in context fields not already set (inner raise sites know
+        more than outer ones — first writer wins); returns ``self``."""
+        if self.task is None:
+            self.task = task
+        if self.keyword is None:
+            self.keyword = keyword
+        if self.file is None:
+            self.file = file
+        if self.line is None:
+            self.line = line
+        return self
+
+    @property
+    def keyword_path(self) -> str:
+        """``task.keyword.sub`` dotted path ('' when no context)."""
+        return ".".join(p for p in (self.task, self.keyword) if p)
+
+    def __str__(self) -> str:
+        prefix = []
+        if self.file:
+            prefix.append(f"{self.file}:{self.line}" if self.line
+                          else str(self.file))
+        if self.keyword_path:
+            prefix.append(self.keyword_path)
+        if prefix:
+            return f"{': '.join(prefix)}: {self.message}"
+        return self.message
 
 
 def _num(text: str) -> int | float:
@@ -223,16 +287,26 @@ class TaskSpec:
 
 @dataclasses.dataclass
 class StudySpec:
-    """A parsed parameter study: ordered tasks."""
+    """A parsed parameter study: ordered tasks (+ a ``lint:`` policy
+    block and, when parsed from a file, the source origin)."""
 
     tasks: dict[str, TaskSpec]
+    #: parsed top-level ``lint:`` block — keys ``suppress`` (rule ids),
+    #: ``max_runtime_days``, ``slots`` (see ``repro.core.lint``)
+    lint: dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: source provenance: {"file": str|None, "lines": {(task, kw, ...):
+    #: line}} — populated by the YAML/INI parsers, diagnostic-only
+    origin: dict[str, Any] = dataclasses.field(
+        default_factory=dict, compare=False, repr=False)
 
     def validate(self) -> None:
         names = set(self.tasks)
         for t in self.tasks.values():
             for dep in t.after:
                 if dep not in names:
-                    raise WDLError(f"task {t.task!r}: unknown dependency {dep!r}")
+                    raise WDLError(
+                        f"task {t.task!r}: unknown dependency {dep!r}",
+                        task=t.task, keyword="after")
             for mname, cap in t.capture.items():
                 source = getattr(cap, "source", "stdout")
                 if source.startswith("outfile:") \
@@ -240,7 +314,8 @@ class StudySpec:
                     raise WDLError(
                         f"task {t.task!r}: capture {mname!r} reads "
                         f"{source!r} but the task declares no such "
-                        f"outfile (declared: {sorted(t.outfiles) or 'none'})")
+                        f"outfile (declared: {sorted(t.outfiles) or 'none'})",
+                        task=t.task, keyword=f"capture.{mname}.source")
             for group in t.fixed:
                 params = t.parameters()
                 lens = []
@@ -251,157 +326,300 @@ class StudySpec:
                         if len(matches) != 1:
                             raise WDLError(
                                 f"task {t.task!r}: fixed refers to unknown/ambiguous "
-                                f"parameter {pname!r}"
-                            )
+                                f"parameter {pname!r}",
+                                task=t.task, keyword="fixed")
                         pname = matches[0]
                     lens.append(len(params[pname]))
                 if len(set(lens)) > 1:
                     raise WDLError(
                         f"task {t.task!r}: fixed group {group} has mismatched "
-                        f"value counts {lens} (bijection requires equal lengths)"
-                    )
+                        f"value counts {lens} (bijection requires equal lengths)",
+                        task=t.task, keyword="fixed")
 
 
 def _parse_task(name: str, body: Mapping[str, Any]) -> TaskSpec:
     if not isinstance(body, Mapping):
-        raise WDLError(f"task {name!r}: body must be a mapping, got {type(body).__name__}")
+        raise WDLError(
+            f"task {name!r}: body must be a mapping, got "
+            f"{type(body).__name__}", task=str(name))
     spec = TaskSpec(task=str(name))
     for kw_raw, val in body.items():
         kw = str(kw_raw)
-        if kw == "command":
-            if not isinstance(val, str):
-                raise WDLError(f"task {name!r}: command must be a string")
-            spec.command = val
-        elif kw == "name":
-            spec.name = str(val)
-        elif kw == "environ":
-            if not isinstance(val, Mapping):
-                raise WDLError(f"task {name!r}: environ must be a mapping")
-            spec.environ = {str(k): _expand_values(v) for k, v in val.items()}
-        elif kw == "after":
-            spec.after = [str(v) for v in (val if isinstance(val, list) else [val])]
-        elif kw in ("infiles", "outfiles"):
-            if not isinstance(val, Mapping):
-                raise WDLError(f"task {name!r}: {kw} must be a mapping")
-            getattr(spec, kw).update({str(k): str(v) for k, v in val.items()})
-        elif kw == "substitute":
-            if not isinstance(val, Mapping):
-                raise WDLError(f"task {name!r}: substitute must be a mapping")
-            spec.substitute = {str(k): _expand_values(v) for k, v in val.items()}
-        elif kw == "parallel":
-            spec.parallel = str(val)
-        elif kw == "batch":
-            spec.batch = str(val)
-        elif kw in ("nnodes", "ppnode"):
-            setattr(spec, kw, int(val))
-        elif kw == "hosts":
-            spec.hosts = [str(v) for v in (val if isinstance(val, list) else [val])]
-        elif kw == "fixed":
-            if isinstance(val, list) and val and isinstance(val[0], list):
-                spec.fixed = [[str(p) for p in grp] for grp in val]
-            elif isinstance(val, list):
-                spec.fixed = [[str(p) for p in val]]
-            else:
-                raise WDLError(f"task {name!r}: fixed must be a list")
-        elif kw == "timeout":
-            try:
-                spec.timeout = float(val)
-            except (TypeError, ValueError) as e:
-                raise WDLError(f"task {name!r}: timeout must be a number") from e
-            if spec.timeout <= 0:
-                raise WDLError(f"task {name!r}: timeout must be positive")
-        elif kw == "allow_nonzero":
-            spec.allow_nonzero = (
-                val if isinstance(val, bool)
-                else str(val).strip().lower() in ("1", "true", "yes", "on"))
-        elif kw == "straggler_quantile":
-            txt = str(val).strip().lower()
-            try:
-                # "p90"/"P99" shorthand or a plain fraction like 0.9
-                q = float(txt[1:]) / 100.0 if txt.startswith("p") \
-                    else float(txt)
-            except (TypeError, ValueError) as e:
-                raise WDLError(
-                    f"task {name!r}: straggler_quantile must be a "
-                    f"fraction in (0, 1) or 'pNN' (e.g. p90), "
-                    f"got {val!r}") from e
-            if not 0.0 < q < 1.0:
-                raise WDLError(
-                    f"task {name!r}: straggler_quantile must be in "
-                    f"(0, 1), got {q!r}")
-            spec.straggler_quantile = q
-        elif kw == "capture":
-            from .results import CaptureError, parse_captures
+        try:
+            _parse_keyword(spec, name, kw, val)
+        except WDLError as e:
+            # inner sites may know a deeper path (capture.gflops.regex);
+            # default to the keyword being dispatched
+            raise e.with_context(task=str(name), keyword=kw)
+    return spec
 
-            try:
-                spec.capture = parse_captures(name, val)
-            except CaptureError as e:
-                raise WDLError(str(e)) from e
-        elif kw == "baseline":
-            if not isinstance(val, Mapping):
-                raise WDLError(
-                    f"task {name!r}: baseline must be a mapping of "
-                    f"parameter (or captured metric) to reference value")
-            spec.baseline = {}
-            for k, v in val.items():
-                iv = infer_value(v)
-                if isinstance(iv, list):
-                    raise WDLError(
-                        f"task {name!r}: baseline value for {k!r} must be "
-                        f"a scalar, got {v!r}")
-                spec.baseline[str(k)] = iv
-        elif kw == "sampling":
-            if isinstance(val, str):
-                spec.sampling = {"method": val}
-            elif isinstance(val, Mapping):
-                spec.sampling = {str(k): v for k, v in val.items()}
-            else:
-                raise WDLError(f"task {name!r}: sampling must be a string or mapping")
+
+def _parse_keyword(spec: TaskSpec, name: str, kw: str, val: Any) -> None:
+    if kw == "command":
+        if not isinstance(val, str):
+            raise WDLError(f"task {name!r}: command must be a string")
+        spec.command = val
+    elif kw == "name":
+        spec.name = str(val)
+    elif kw == "environ":
+        if not isinstance(val, Mapping):
+            raise WDLError(f"task {name!r}: environ must be a mapping")
+        spec.environ = {str(k): _expand_values(v) for k, v in val.items()}
+    elif kw == "after":
+        spec.after = [str(v) for v in (val if isinstance(val, list) else [val])]
+    elif kw in ("infiles", "outfiles"):
+        if not isinstance(val, Mapping):
+            raise WDLError(f"task {name!r}: {kw} must be a mapping")
+        getattr(spec, kw).update({str(k): str(v) for k, v in val.items()})
+    elif kw == "substitute":
+        if not isinstance(val, Mapping):
+            raise WDLError(f"task {name!r}: substitute must be a mapping")
+        spec.substitute = {str(k): _expand_values(v) for k, v in val.items()}
+    elif kw == "parallel":
+        spec.parallel = str(val)
+    elif kw == "batch":
+        spec.batch = str(val)
+    elif kw in ("nnodes", "ppnode"):
+        setattr(spec, kw, int(val))
+    elif kw == "hosts":
+        spec.hosts = [str(v) for v in (val if isinstance(val, list) else [val])]
+    elif kw == "fixed":
+        if isinstance(val, list) and val and isinstance(val[0], list):
+            spec.fixed = [[str(p) for p in grp] for grp in val]
+        elif isinstance(val, list):
+            spec.fixed = [[str(p) for p in val]]
         else:
-            # user-defined keyword: scalar, list, or one more level of k/v
-            if isinstance(val, Mapping):
-                spec.user[kw] = {str(k): _expand_values(v) for k, v in val.items()}
-            else:
-                spec.user[kw] = {None: _expand_values(val)}
-    return spec
+            raise WDLError(f"task {name!r}: fixed must be a list")
+    elif kw == "timeout":
+        try:
+            spec.timeout = float(val)
+        except (TypeError, ValueError) as e:
+            raise WDLError(f"task {name!r}: timeout must be a number") from e
+        if spec.timeout <= 0:
+            raise WDLError(f"task {name!r}: timeout must be positive")
+    elif kw == "allow_nonzero":
+        spec.allow_nonzero = (
+            val if isinstance(val, bool)
+            else str(val).strip().lower() in ("1", "true", "yes", "on"))
+    elif kw == "straggler_quantile":
+        txt = str(val).strip().lower()
+        try:
+            # "p90"/"P99" shorthand or a plain fraction like 0.9
+            q = float(txt[1:]) / 100.0 if txt.startswith("p") \
+                else float(txt)
+        except (TypeError, ValueError) as e:
+            raise WDLError(
+                f"task {name!r}: straggler_quantile must be a "
+                f"fraction in (0, 1) or 'pNN' (e.g. p90), "
+                f"got {val!r}") from e
+        if not 0.0 < q < 1.0:
+            raise WDLError(
+                f"task {name!r}: straggler_quantile must be in "
+                f"(0, 1), got {q!r}")
+        spec.straggler_quantile = q
+    elif kw == "capture":
+        from .results import CaptureError, parse_captures
+
+        try:
+            spec.capture = parse_captures(name, val)
+        except CaptureError as e:
+            # CaptureError knows the deep path (capture.gflops.regex)
+            raise WDLError(str(e),
+                           keyword=getattr(e, "keyword", None)) from e
+    elif kw == "baseline":
+        if not isinstance(val, Mapping):
+            raise WDLError(
+                f"task {name!r}: baseline must be a mapping of "
+                f"parameter (or captured metric) to reference value")
+        spec.baseline = {}
+        for k, v in val.items():
+            iv = infer_value(v)
+            if isinstance(iv, list):
+                raise WDLError(
+                    f"task {name!r}: baseline value for {k!r} must be "
+                    f"a scalar, got {v!r}")
+            spec.baseline[str(k)] = iv
+    elif kw == "sampling":
+        if isinstance(val, str):
+            spec.sampling = {"method": val}
+        elif isinstance(val, Mapping):
+            spec.sampling = {str(k): v for k, v in val.items()}
+        else:
+            raise WDLError(f"task {name!r}: sampling must be a string or mapping")
+    else:
+        # user-defined keyword: scalar, list, or one more level of k/v
+        if isinstance(val, Mapping):
+            spec.user[kw] = {str(k): _expand_values(v) for k, v in val.items()}
+        else:
+            spec.user[kw] = {None: _expand_values(val)}
 
 
-def parse_dict(doc: Mapping[str, Any]) -> StudySpec:
-    """Parse an already-deserialized study document."""
+#: recognized keys of the top-level ``lint:`` block.
+_LINT_KEYS = frozenset({"suppress", "max_runtime_days", "slots"})
+
+
+def _parse_lint_block(val: Any) -> dict[str, Any]:
+    """Parse the top-level ``lint:`` block (study-local lint policy)."""
+    if val is None:
+        return {}
+    if not isinstance(val, Mapping):
+        raise WDLError("lint: must be a mapping", keyword="lint")
+    out: dict[str, Any] = {}
+    for k_raw, v in val.items():
+        k = str(k_raw)
+        if k not in _LINT_KEYS:
+            raise WDLError(
+                f"lint: unknown key {k!r} "
+                f"(valid: {', '.join(sorted(_LINT_KEYS))})",
+                keyword=f"lint.{k}")
+        if k == "suppress":
+            out[k] = [str(s) for s in (v if isinstance(v, list) else [v])]
+        elif k == "max_runtime_days":
+            try:
+                out[k] = float(v)
+            except (TypeError, ValueError) as e:
+                raise WDLError("lint: max_runtime_days must be a number",
+                               keyword="lint.max_runtime_days") from e
+        elif k == "slots":
+            try:
+                out[k] = int(v)
+            except (TypeError, ValueError) as e:
+                raise WDLError("lint: slots must be an integer",
+                               keyword="lint.slots") from e
+    return out
+
+
+def _attach_origin(e: WDLError, origin: Mapping[str, Any] | None) -> WDLError:
+    """Fill an error's file/line from a parse origin (line lookup walks
+    the longest known prefix of the task.keyword path)."""
+    if not origin:
+        return e
+    lines: Mapping[tuple, int] = origin.get("lines") or {}
+    parts: list[str] = []
+    if e.task:
+        parts.append(e.task)
+    if e.keyword:
+        parts.extend(e.keyword.split("."))
+    line = None
+    for n in range(len(parts), 0, -1):
+        line = lines.get(tuple(parts[:n]))
+        if line is not None:
+            break
+    return e.with_context(file=origin.get("file"), line=line)
+
+
+def parse_dict(doc: Mapping[str, Any], validate: bool = True, *,
+               origin: Mapping[str, Any] | None = None) -> StudySpec:
+    """Parse an already-deserialized study document.
+
+    ``validate=False`` skips ``StudySpec.validate()`` — tools that want
+    to collect *all* diagnostics instead of aborting at the first (the
+    linter) parse unvalidated and run the rule packs themselves.
+    """
     if not isinstance(doc, Mapping) or not doc:
-        raise WDLError("study document must be a non-empty mapping of tasks")
+        raise _attach_origin(
+            WDLError("study document must be a non-empty mapping of tasks"),
+            origin)
     tasks: dict[str, TaskSpec] = {}
+    lint_block: dict[str, Any] = {}
     for tname, body in doc.items():
-        tasks[str(tname)] = _parse_task(str(tname), body or {})
-    spec = StudySpec(tasks=tasks)
-    spec.validate()
+        tname = str(tname)
+        try:
+            if tname == "lint":
+                lint_block = _parse_lint_block(body)
+            else:
+                tasks[tname] = _parse_task(tname, body or {})
+        except WDLError as e:
+            raise _attach_origin(e, origin)
+    if not tasks:
+        raise _attach_origin(
+            WDLError("study document declares no tasks"), origin)
+    spec = StudySpec(tasks=tasks, lint=lint_block,
+                     origin=dict(origin) if origin else {})
+    if validate:
+        try:
+            spec.validate()
+        except WDLError as e:
+            raise _attach_origin(e, origin)
     return spec
 
 
-def parse_yaml(text: str) -> StudySpec:
+def _yaml_line_map(text: str) -> dict[tuple, int]:
+    """(task,), (task, kw), (task, kw, sub) → 1-based source line."""
+    try:
+        root = yaml.compose(io.StringIO(text))
+    except yaml.YAMLError:  # parse error surfaces via safe_load
+        return {}
+    lines: dict[tuple, int] = {}
+    if not isinstance(root, yaml.MappingNode):
+        return lines
+    for tkey, tval in root.value:
+        tname = str(tkey.value)
+        lines[(tname,)] = tkey.start_mark.line + 1
+        if not isinstance(tval, yaml.MappingNode):
+            continue
+        for kkey, kval in tval.value:
+            kname = str(kkey.value)
+            lines[(tname, kname)] = kkey.start_mark.line + 1
+            if not isinstance(kval, yaml.MappingNode):
+                continue
+            for skey, _sval in kval.value:
+                lines[(tname, kname, str(skey.value))] = \
+                    skey.start_mark.line + 1
+    return lines
+
+
+def _ini_line_map(text: str) -> dict[tuple, int]:
+    """Best-effort section/key → line scan for the INI flavor."""
+    lines: dict[tuple, int] = {}
+    section: str | None = None
+    for i, raw in enumerate(text.splitlines(), 1):
+        s = raw.strip()
+        if not s or s.startswith(("#", ";")):
+            continue
+        if s.startswith("[") and s.endswith("]"):
+            section = s[1:-1].strip()
+            lines.setdefault((section,), i)
+        elif section is not None and ("=" in s or ":" in s):
+            key = re.split(r"[=:]", s, 1)[0].strip()
+            if not key:
+                continue
+            top, _, sub = key.partition(".")
+            lines.setdefault((section, top), i)
+            if sub:
+                lines.setdefault((section, top, sub), i)
+    return lines
+
+
+def parse_yaml(text: str, validate: bool = True,
+               filename: str | None = None) -> StudySpec:
     try:
         doc = yaml.safe_load(io.StringIO(text))
     except yaml.YAMLError as e:  # pragma: no cover - passthrough
-        raise WDLError(f"YAML parse error: {e}") from e
-    return parse_dict(doc or {})
+        raise WDLError(f"YAML parse error: {e}", file=filename) from e
+    origin = {"file": filename, "lines": _yaml_line_map(text)}
+    return parse_dict(doc or {}, validate, origin=origin)
 
 
-def parse_json(text: str) -> StudySpec:
+def parse_json(text: str, validate: bool = True,
+               filename: str | None = None) -> StudySpec:
     try:
         doc = json.loads(text)
     except json.JSONDecodeError as e:
-        raise WDLError(f"JSON parse error: {e}") from e
-    return parse_dict(doc)
+        raise WDLError(f"JSON parse error: {e}", file=filename) from e
+    return parse_dict(doc, validate,
+                      origin={"file": filename, "lines": {}})
 
 
-def parse_ini(text: str) -> StudySpec:
+def parse_ini(text: str, validate: bool = True,
+              filename: str | None = None) -> StudySpec:
     """INI-like flavor: sections are tasks; dotted keys give 2nd level;
     comma-separated values are lists."""
     cp = configparser.ConfigParser(interpolation=None, comment_prefixes=("#", ";"))
     try:
         cp.read_string(text)
     except configparser.Error as e:
-        raise WDLError(f"INI parse error: {e}") from e
+        raise WDLError(f"INI parse error: {e}", file=filename) from e
     doc: dict[str, dict[str, Any]] = {}
     for section in cp.sections():
         body: dict[str, Any] = {}
@@ -413,29 +631,55 @@ def parse_ini(text: str) -> StudySpec:
             else:
                 body[key] = value
         doc[section] = body
-    return parse_dict(doc)
+    return parse_dict(doc, validate,
+                      origin={"file": filename, "lines": _ini_line_map(text)})
 
 
-def parse_file(path: str | Path) -> StudySpec:
+def parse_file(path: str | Path, validate: bool = True) -> StudySpec:
     """Parse a parameter file, dispatching on extension."""
     path = Path(path)
     text = path.read_text()
     suffix = path.suffix.lower()
     if suffix == ".json":
-        return parse_json(text)
+        return parse_json(text, validate, filename=str(path))
     if suffix in (".ini", ".cfg"):
-        return parse_ini(text)
-    return parse_yaml(text)
+        return parse_ini(text, validate, filename=str(path))
+    return parse_yaml(text, validate, filename=str(path))
 
 
 def merge(*specs: StudySpec) -> StudySpec:
     """Compose a study from multiple parameter files (paper §4.1: a
-    workflow description may be divided across files)."""
+    workflow description may be divided across files).
+
+    Two specs declaring the *same* task field-merge (dicts union, lists
+    concatenate, scalars overwrite).  Contradictory singletons raise:
+    two different ``baseline:`` blocks for one task (matching the
+    treatment of conflicting ``sampling`` blocks at space-construction
+    time), and two different scalar values for one ``lint:`` policy key
+    (``suppress`` lists union)."""
     tasks: dict[str, TaskSpec] = {}
+    lint: dict[str, Any] = {}
     for spec in specs:
+        for key, v in (spec.lint or {}).items():
+            if key == "suppress":
+                cur = lint.setdefault("suppress", [])
+                cur.extend(s for s in v if s not in cur)
+            elif key in lint and lint[key] != v:
+                raise WDLError(
+                    f"conflicting lint.{key} in merged specs: "
+                    f"{lint[key]!r} vs {v!r}", keyword=f"lint.{key}")
+            else:
+                lint[key] = v
         for tname, t in spec.tasks.items():
             if tname in tasks:
                 base = tasks[tname]
+                if base.baseline and t.baseline \
+                        and base.baseline != t.baseline:
+                    raise WDLError(
+                        f"task {tname!r}: conflicting baseline blocks in "
+                        f"merged specs: {base.baseline!r} vs "
+                        f"{t.baseline!r} — a study has one reference "
+                        f"point", task=tname, keyword="baseline")
                 for f in dataclasses.fields(TaskSpec):
                     val = getattr(t, f.name)
                     if f.name == "task":
@@ -455,6 +699,6 @@ def merge(*specs: StudySpec) -> StudySpec:
                         setattr(base, f.name, val)
             else:
                 tasks[tname] = dataclasses.replace(t)
-    out = StudySpec(tasks=tasks)
+    out = StudySpec(tasks=tasks, lint=lint)
     out.validate()
     return out

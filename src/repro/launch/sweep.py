@@ -51,7 +51,7 @@ import jax
 from repro.configs import get_smoke
 from repro.core import (
     GangExecutor, LocalSubmitter, LocalTransport, ResultsAggregator,
-    SchedulerSubmitter, SSHTransport, load_study, stackable_key,
+    SchedulerSubmitter, SSHTransport, WDLError, load_study, stackable_key,
 )
 from repro.launch import report as report_mod
 from repro.train.ensemble import train_ensemble
@@ -139,10 +139,32 @@ def main() -> None:
                     help="statistic for table/speedup cells")
     ap.add_argument("--format", choices=report_mod.FORMATS, default="md",
                     dest="report_format", help="report output format")
+    ap.add_argument("--check", action="store_true",
+                    help="pre-flight static analysis (repro.core.lint) "
+                         "before admitting the run: print findings and "
+                         "exit 1 on any error-severity rule — the same "
+                         "checks 'python -m repro.launch.lint' runs")
     ap.add_argument("--root", default=".papas")
     args = ap.parse_args()
 
-    study = load_study(*[Path(p) for p in args.paramfile], root=args.root)
+    try:
+        study = load_study(*[Path(p) for p in args.paramfile],
+                           root=args.root)
+    except WDLError as e:
+        if not args.check:
+            raise
+        print(f"ERROR E001 {e}", file=sys.stderr)
+        sys.exit(1)
+
+    if args.check:
+        report = study.lint(slots=args.slots)
+        if report.findings:
+            print(report.render(), file=sys.stderr)
+        if not report.ok:
+            print("lint: study rejected (fix the errors above or "
+                  "suppress rule ids via the study's lint: block)",
+                  file=sys.stderr)
+            sys.exit(1)
 
     aggregator = None
     if args.report is not None:

@@ -1,0 +1,465 @@
+"""Static analysis (``papas lint``) — the study rule pack.
+
+Covers: every rule id firing on a targeted minimal spec, the clean
+example staying clean, the seeded-defect CI fixture tripping its full
+rule set, ``lint:`` block suppression/policy keys, merged-spec conflict
+errors, structured WDLError context (task/keyword/file/line), the CLI
+front end's exit codes and JSON output, and the O(params) cost bound
+(linting a 10^5-combination study in well under a second).
+"""
+import json
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.core import (
+    RULES, WDLError, lint, load_study, merge, parse_yaml,
+)
+from repro.launch import lint as lint_cli
+
+FIXTURE = Path(__file__).parent / "fixtures" / "broken_study.yaml"
+EXAMPLES = Path(__file__).parent.parent / "examples"
+
+
+def _lint(text, **kw):
+    return lint(parse_yaml(text, validate=False), **kw)
+
+
+def _rules(report):
+    return {f.rule for f in report.findings}
+
+
+class TestRegistry:
+    def test_every_rule_has_valid_severity(self):
+        assert all(r.severity in ("error", "warn", "info")
+                   for r in RULES.values())
+
+    def test_ids_are_stable_and_unique(self):
+        assert RULES["E101"].severity == "error"
+        assert RULES["W601"].severity == "warn"
+        assert RULES["I601"].severity == "info"
+        assert len({r.id for r in RULES.values()}) == len(RULES)
+
+
+class TestReferences:
+    def test_unbound_reference_is_e101(self):
+        rep = _lint("t:\n  command: run ${args:sizee}\n"
+                    "  args:\n    size: [1, 2]\n")
+        assert _rules(rep) == {"E101"}
+        f = rep.errors[0]
+        assert f.task == "t" and f.keyword == "command"
+        assert "${args:sizee}" in f.message
+
+    def test_ambiguous_tail_is_e102(self):
+        rep = _lint("t:\n  command: run ${x}\n"
+                    "  args:\n    x: [1]\n  opts:\n    x: [2]\n")
+        assert _rules(rep) == {"E102"}
+
+    def test_intertask_reference_in_command_resolves(self):
+        rep = _lint("a:\n  command: gen ${size}\n"
+                    "  args:\n    size: [1, 2]\n"
+                    "b:\n  command: use ${a:args:size}\n  after: [a]\n")
+        assert rep.findings == []
+
+    def test_intertask_reference_in_infile_is_e101(self):
+        # infile name templates render against the combo alone
+        # (staging passes no studies scope) — mirror that exactly
+        rep = _lint("a:\n  command: gen\n  args:\n    size: [1]\n"
+                    "  outfiles:\n    dat: out.dat\n"
+                    "b:\n  command: use\n  after: [a]\n"
+                    "  infiles:\n    dat: in_${a:args:size}.dat\n")
+        assert "E101" in _rules(rep)
+        assert any(f.keyword == "infiles.dat" for f in rep.errors)
+
+    def test_nested_reference_is_followed(self):
+        # a resolvable value re-introduces ${...}: the worklist must
+        # chase it, exactly like the render fixpoint
+        rep = _lint("t:\n  command: run ${mode}\n"
+                    "  mode: ['--flag ${missing}']\n")
+        assert _rules(rep) == {"E101"}
+
+    def test_unreferenced_bad_value_is_not_flagged(self):
+        # only values reachable from a checked template are scanned
+        rep = _lint("t:\n  command: run ${args:size}\n"
+                    "  args:\n    size: [1]\n"
+                    "  unused: ['${nope}']\n")
+        assert rep.findings == []
+
+
+class TestDAG:
+    def test_unknown_after_is_e201(self):
+        rep = _lint("t:\n  command: x\n  after: [ghost]\n")
+        assert "E201" in _rules(rep)
+
+    def test_cycle_is_e202(self):
+        rep = _lint("a:\n  command: x\n  after: [b]\n"
+                    "b:\n  command: y\n  after: [a]\n")
+        assert "E202" in _rules(rep)
+        msg = next(f for f in rep.errors if f.rule == "E202").message
+        assert "->" in msg
+
+    def test_downstream_of_cycle_is_e203(self):
+        rep = _lint("a:\n  command: x\n  after: [b]\n"
+                    "b:\n  command: y\n  after: [a]\n"
+                    "c:\n  command: z\n  after: [a]\n")
+        assert {"E202", "E203"} <= _rules(rep)
+        assert any(f.rule == "E203" and f.task == "c"
+                   for f in rep.errors)
+
+    def test_clean_chain_has_no_findings(self):
+        rep = _lint("a:\n  command: x\n"
+                    "b:\n  command: y\n  after: [a]\n"
+                    "c:\n  command: z\n  after: [a, b]\n")
+        assert rep.findings == []
+
+
+class TestDataflow:
+    def test_parameterized_infile_without_producer_is_e301(self):
+        rep = _lint("t:\n  command: use\n  part: [1, 2]\n"
+                    "  infiles:\n    chunk: chunk_${part}.dat\n")
+        assert "E301" in _rules(rep)
+
+    def test_matching_outfile_upstream_is_clean(self):
+        rep = _lint("a:\n  command: gen\n  part: [1, 2]\n"
+                    "  outfiles:\n    chunk: chunk_${part}.dat\n"
+                    "b:\n  command: use\n  after: [a]\n  part: [1, 2]\n"
+                    "  infiles:\n    chunk: chunk_${part}.dat\n")
+        assert rep.findings == []
+
+    def test_producer_not_an_ancestor_is_e302(self):
+        rep = _lint("a:\n  command: gen\n  part: [1, 2]\n"
+                    "  outfiles:\n    chunk: chunk_${part}.dat\n"
+                    "b:\n  command: use\n  part: [1, 2]\n"
+                    "  infiles:\n    chunk: chunk_${part}.dat\n")
+        assert "E302" in _rules(rep)
+
+    def test_missing_static_infile_is_w303(self):
+        rep = _lint("t:\n  command: use\n"
+                    "  infiles:\n    cfg: /no/such/file.cfg\n")
+        assert _rules(rep) == {"W303"}
+        assert rep.ok    # warning, not error
+
+    def test_existing_static_infile_is_clean(self, tmp_path):
+        ext = tmp_path / "input.cfg"
+        ext.write_text("x")
+        rep = _lint(f"t:\n  command: use\n"
+                    f"  infiles:\n    cfg: {ext}\n")
+        assert rep.findings == []
+
+
+class TestCaptures:
+    def test_numbered_group_beyond_pattern_is_e401(self):
+        rep = _lint("t:\n  command: x\n"
+                    "  capture:\n    m:\n"
+                    "      regex: 'v=([0-9]+)'\n      group: 2\n")
+        assert "E401" in _rules(rep)
+
+    def test_named_group_missing_is_e401(self):
+        rep = _lint("t:\n  command: x\n"
+                    "  capture:\n    m:\n"
+                    "      regex: 'v=(?P<val>[0-9]+)'\n      group: nope\n")
+        assert "E401" in _rules(rep)
+
+    def test_undeclared_outfile_source_is_e403(self):
+        rep = _lint("t:\n  command: x\n"
+                    "  capture:\n    m:\n"
+                    "      regex: 'v=([0-9]+)'\n"
+                    "      source: 'outfile:missing'\n")
+        assert "E403" in _rules(rep)
+        f = next(f for f in rep.errors if f.rule == "E403")
+        assert f.keyword == "capture.m.source"
+
+    def test_valid_capture_is_clean(self):
+        rep = _lint("t:\n  command: x\n"
+                    "  outfiles:\n    log: run.log\n"
+                    "  capture:\n    m:\n"
+                    "      regex: 'v=(?P<val>[0-9]+)'\n      group: val\n"
+                    "      source: 'outfile:log'\n")
+        assert rep.findings == []
+
+
+class TestBaseline:
+    def test_unknown_key_is_e501(self):
+        rep = _lint("t:\n  command: x ${args:size}\n"
+                    "  args:\n    size: [1, 2]\n"
+                    "  baseline:\n    threads: 1\n")
+        assert _rules(rep) == {"E501"}
+
+    def test_value_outside_declared_values_is_e502(self):
+        rep = _lint("t:\n  command: x ${args:size}\n"
+                    "  args:\n    size: [1, 2, 4]\n"
+                    "  baseline:\n    size: 3\n")
+        assert _rules(rep) == {"E502"}
+
+    def test_declared_value_is_clean(self):
+        rep = _lint("t:\n  command: x ${args:size}\n"
+                    "  args:\n    size: [1, 2, 4]\n"
+                    "  baseline:\n    size: 2\n")
+        assert rep.findings == []
+
+    def test_captured_metric_key_skips_membership(self):
+        # baseline on a reported-value axis (captured metric or a
+        # builtin like duration) cannot be checked statically
+        rep = _lint("t:\n  command: x\n"
+                    "  capture:\n    gflops:\n"
+                    "      regex: 'g=([0-9.]+)'\n"
+                    "  baseline:\n    gflops: 12.5\n"
+                    "    duration: 1.0\n")
+        assert rep.findings == []
+
+    def test_conflicting_baselines_across_tasks_is_e503(self):
+        rep = _lint("a:\n  command: x ${args:n}\n"
+                    "  args:\n    n: [1, 2]\n"
+                    "  baseline:\n    n: 1\n"
+                    "b:\n  command: y ${args:n}\n"
+                    "  args:\n    n: [1, 2]\n"
+                    "  baseline:\n    n: 2\n")
+        assert "E503" in _rules(rep)
+
+    def test_e502_preview_is_truncated(self):
+        rep = lint_cli.lint_file(FIXTURE)
+        msg = next(f for f in rep.errors if f.rule == "E502").message
+        assert "... (" in msg and len(msg) < 500
+
+
+class TestSpace:
+    def test_conflicting_sampling_is_e504(self):
+        rep = _lint("a:\n  command: x ${args:n}\n"
+                    "  args:\n    n: [1, 2]\n"
+                    "  sampling:\n    method: random\n    count: 2\n"
+                    "b:\n  command: y ${args:m}\n"
+                    "  args:\n    m: [1, 2]\n"
+                    "  sampling:\n    method: random\n    count: 3\n")
+        assert "E504" in _rules(rep)
+
+    def test_conflicting_hosts_is_e505(self):
+        rep = _lint("a:\n  command: x\n  hosts: [h1, h2]\n"
+                    "b:\n  command: y\n  hosts: [h3]\n")
+        assert "E505" in _rules(rep)
+
+    def test_agreeing_hosts_is_clean(self):
+        rep = _lint("a:\n  command: x\n  hosts: [h1, h2]\n"
+                    "b:\n  command: y\n  hosts: [h1, h2]\n")
+        assert rep.findings == []
+
+    def test_conflicting_straggler_quantile_is_e506(self):
+        rep = _lint("a:\n  command: x\n  straggler_quantile: 0.9\n"
+                    "b:\n  command: y\n  straggler_quantile: 0.95\n")
+        assert "E506" in _rules(rep)
+
+
+class TestCost:
+    def test_timeout_prices_an_i601_estimate(self):
+        rep = _lint("t:\n  command: x ${args:n}\n"
+                    "  args:\n    n: [1, 2, 3, 4]\n  timeout: 60\n")
+        assert _rules(rep) == {"I601"}
+        assert "4 instance(s)" in rep.infos[0].message
+
+    def test_over_budget_is_w601(self):
+        # 1000 instances x 1h / 1 slot ≈ 41 days > 30-day default
+        rep = _lint("t:\n  command: x ${args:n}\n"
+                    "  args:\n    n: ['1:1:1000']\n  timeout: 3600\n",
+                    slots=1)
+        assert _rules(rep) == {"W601"}
+        assert rep.ok    # warning: admissible, but flagged
+
+    def test_slots_argument_divides_the_estimate(self):
+        rep = _lint("t:\n  command: x ${args:n}\n"
+                    "  args:\n    n: ['1:1:1000']\n  timeout: 3600\n",
+                    slots=100)
+        assert _rules(rep) == {"I601"}
+
+    def test_priors_override_timeout(self):
+        # observed medians say the task is fast despite a huge timeout
+        rep = _lint("t:\n  command: x ${args:n}\n"
+                    "  args:\n    n: ['1:1:1000']\n  timeout: 86400\n",
+                    slots=1, priors={"t": 0.5})
+        assert _rules(rep) == {"I601"}
+
+    def test_budget_override_flips_severity(self):
+        text = ("t:\n  command: x ${args:n}\n"
+                "  args:\n    n: [1, 2]\n  timeout: 3600\n")
+        assert _rules(_lint(text, slots=1)) == {"I601"}
+        assert _rules(_lint(text, slots=1,
+                            max_runtime_days=0.01)) == {"W601"}
+
+    def test_unpriced_tasks_are_reported(self):
+        rep = _lint("a:\n  command: x\n  timeout: 10\n"
+                    "b:\n  command: y\n")
+        assert "excluded: b" in rep.infos[0].message
+
+    def test_no_duration_information_no_estimate(self):
+        rep = _lint("t:\n  command: x ${args:n}\n"
+                    "  args:\n    n: [1, 2]\n")
+        assert rep.findings == []
+
+
+class TestLintBlock:
+    def test_suppress_drops_and_records(self):
+        rep = _lint("lint:\n  suppress: [W601]\n"
+                    "t:\n  command: x ${args:n}\n"
+                    "  args:\n    n: ['1:1:1000']\n  timeout: 3600\n",
+                    slots=1)
+        assert _rules(rep) == set()
+        assert rep.suppressed == ["W601"]
+
+    def test_suppressing_a_warning_does_not_hide_errors(self):
+        rep = _lint("lint:\n  suppress: [W601]\n"
+                    "t:\n  command: x ${nope}\n")
+        assert _rules(rep) == {"E101"}
+        assert not rep.ok
+
+    def test_block_sets_cost_policy(self):
+        # slots: 1 in the block makes the same sweep 100x slower than
+        # the default 8 would estimate — enough to cross the budget
+        rep = _lint("lint:\n  slots: 1\n  max_runtime_days: 0.01\n"
+                    "t:\n  command: x ${args:n}\n"
+                    "  args:\n    n: [1, 2]\n  timeout: 3600\n")
+        assert _rules(rep) == {"W601"}
+
+    def test_unknown_policy_key_raises(self):
+        with pytest.raises(WDLError, match="lint"):
+            parse_yaml("lint:\n  bogus: 1\nt:\n  command: x\n")
+
+    def test_lint_only_document_is_not_a_study(self):
+        with pytest.raises(WDLError, match="no tasks"):
+            parse_yaml("lint:\n  suppress: [W601]\n")
+
+
+class TestMergeConflicts:
+    def test_conflicting_baseline_raises(self):
+        a = parse_yaml("t:\n  command: x ${args:n}\n"
+                       "  args:\n    n: [1, 2]\n"
+                       "  baseline:\n    n: 1\n")
+        b = parse_yaml("t:\n  baseline:\n    n: 2\n", validate=False)
+        with pytest.raises(WDLError, match="baseline") as ei:
+            merge(a, b)
+        assert ei.value.task == "t" and ei.value.keyword == "baseline"
+
+    def test_identical_baseline_merges(self):
+        a = parse_yaml("t:\n  command: x ${args:n}\n"
+                       "  args:\n    n: [1, 2]\n"
+                       "  baseline:\n    n: 1\n")
+        b = parse_yaml("t:\n  baseline:\n    n: 1\n", validate=False)
+        assert merge(a, b).tasks["t"].baseline == {"n": 1}
+
+    def test_suppress_lists_union(self):
+        a = parse_yaml("lint:\n  suppress: [W601]\nt:\n  command: x\n")
+        b = parse_yaml("lint:\n  suppress: [W303, W601]\n"
+                       "t:\n  command: y\n")
+        assert merge(a, b).lint["suppress"] == ["W601", "W303"]
+
+    def test_conflicting_lint_scalar_raises(self):
+        a = parse_yaml("lint:\n  slots: 4\nt:\n  command: x\n")
+        b = parse_yaml("lint:\n  slots: 8\nt:\n  command: y\n")
+        with pytest.raises(WDLError, match="lint.slots"):
+            merge(a, b)
+
+
+class TestWDLErrorContext:
+    def test_parse_error_carries_task_keyword_file_line(self, tmp_path):
+        bad = tmp_path / "bad.yaml"
+        bad.write_text("t:\n  command: x\n"
+                       "  capture:\n    m:\n      regex: '(unclosed'\n")
+        with pytest.raises(WDLError) as ei:
+            from repro.core import parse_file
+            parse_file(bad)
+        e = ei.value
+        assert e.task == "t"
+        assert e.keyword == "capture.m.regex"
+        assert e.file == str(bad) and isinstance(e.line, int)
+        assert str(e).startswith(f"{bad}:{e.line}: t.capture.m.regex:")
+
+    def test_fixture_findings_are_located(self):
+        rep = lint_cli.lint_file(FIXTURE)
+        e101 = next(f for f in rep.errors if f.rule == "E101")
+        assert e101.file == str(FIXTURE)
+        assert e101.line == 15    # the prep command line
+        assert e101.keyword_path == "prep.command"
+
+
+class TestFixtureAndExamples:
+    def test_broken_fixture_trips_every_seeded_rule(self):
+        rep = lint_cli.lint_file(FIXTURE)
+        assert _rules(rep) == {"E101", "E201", "E202", "E203",
+                               "E301", "E403", "E502", "W601"}
+        assert not rep.ok
+
+    def test_shipped_examples_lint_clean(self):
+        for f in sorted(EXAMPLES.glob("*.yaml")):
+            rep = lint_cli.lint_file(f)
+            assert rep.findings == [], \
+                f"{f.name}: {[x.render() for x in rep.findings]}"
+
+
+class TestCLI:
+    def test_broken_file_exits_1_with_rule_ids(self, capsys):
+        assert lint_cli.main([str(FIXTURE)]) == 1
+        out = capsys.readouterr().out
+        for rid in ("E101", "E201", "E202", "E301", "E403", "E502"):
+            assert rid in out
+        assert "[FAIL]" in out
+
+    def test_clean_file_exits_0(self, capsys):
+        example = EXAMPLES / "matmul_perf.yaml"
+        assert lint_cli.main([str(example)]) == 0
+        assert "[clean]" in capsys.readouterr().out
+
+    def test_strict_promotes_warnings(self, tmp_path, capsys):
+        warn_only = tmp_path / "warn.yaml"
+        warn_only.write_text("t:\n  command: use\n"
+                             "  infiles:\n    cfg: /no/such/file.cfg\n")
+        assert lint_cli.main([str(warn_only)]) == 0
+        assert lint_cli.main([str(warn_only), "--strict"]) == 1
+
+    def test_unparseable_file_is_e001(self, tmp_path, capsys):
+        bad = tmp_path / "bad.yaml"
+        bad.write_text("t:\n  command: x\n  timeout: not-a-number\n")
+        assert lint_cli.main([str(bad)]) == 1
+        assert "E001" in capsys.readouterr().out
+
+    def test_missing_file_is_e001(self, tmp_path, capsys):
+        assert lint_cli.main([str(tmp_path / "nope.yaml")]) == 1
+        assert "E001" in capsys.readouterr().out
+
+    def test_json_format_is_machine_readable(self, capsys):
+        assert lint_cli.main([str(FIXTURE), "--format", "json"]) == 1
+        doc = json.loads(capsys.readouterr().out)
+        assert doc["ok"] is False
+        (rep,) = doc["files"].values()
+        ids = {f["rule"] for f in rep["findings"]}
+        assert {"E101", "E202", "W601"} <= ids
+        # every finding is located
+        assert all("severity" in f and "message" in f
+                   for f in rep["findings"])
+
+
+class TestStudyLint:
+    def test_study_method_prices_from_provenance(self, tmp_path):
+        wdl = tmp_path / "s.yaml"
+        wdl.write_text("t:\n  command: 'true'\n"
+                       "  environ:\n    N: [1, 2]\n  timeout: 60\n")
+        study = load_study(wdl, root=tmp_path / ".papas")
+        rep = study.lint()
+        assert rep.ok
+        assert _rules(rep) == {"I601"}
+
+
+class TestPerformance:
+    def test_lint_of_1e5_combo_study_is_index_math(self):
+        # 50 x 50 x 40 = 100k combinations: lint never enumerates
+        # instances, so this must cost the same as a 10-combo study
+        text = ("t:\n"
+                "  command: run ${args:a} ${args:b} ${args:c}\n"
+                "  args:\n"
+                "    a: ['1:1:50']\n"
+                "    b: ['1:1:50']\n"
+                "    c: ['1:1:40']\n"
+                "  timeout: 60\n")
+        spec = parse_yaml(text, validate=False)
+        t0 = time.perf_counter()
+        rep = lint(spec, slots=8)
+        elapsed = time.perf_counter() - t0
+        assert elapsed < 1.0
+        assert "100000 instance(s)" in rep.findings[0].message

@@ -1,0 +1,97 @@
+"""Property test: the lint reference checker is a static proof.
+
+For randomly generated studies — tasks with random declared parameters
+and commands referencing random (sometimes bogus, sometimes ambiguous)
+``${...}`` paths — the rule pack must be *sound*: a study that lints
+with zero errors renders every one of its instances without raising,
+and conversely a study whose command cannot render must carry at least
+one error-severity finding.  This pins ``classify_reference`` to the
+exact resolution order ``interpolate.resolve`` uses; any drift between
+the two shows up here as a falsifying example.
+"""
+import itertools
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    InterpolationError, compile_template, lint, parse_dict,
+)
+
+TASK_NAMES = ("prep", "crunch", "report")
+PARAM_NAMES = ("alpha", "beta", "gamma")
+GROUPS = ("args", "opts")
+
+
+@st.composite
+def study_docs(draw):
+    """A small random study: 1-3 tasks, each declaring a few grouped
+    parameters and a command whose ``${...}`` slots are drawn from
+    declared paths, short tails, inter-task paths, and typos alike."""
+    names = draw(st.lists(st.sampled_from(TASK_NAMES),
+                          min_size=1, max_size=3, unique=True))
+    doc = {}
+    for tname in names:
+        groups = {}
+        for pname in draw(st.lists(st.sampled_from(PARAM_NAMES),
+                                   min_size=0, max_size=3, unique=True)):
+            group = draw(st.sampled_from(GROUPS))
+            groups.setdefault(group, {})[pname] = [1, 2]
+        ref_pool = (
+            [f"{g}:{p}" for g in GROUPS for p in PARAM_NAMES]
+            + list(PARAM_NAMES)
+            + [f"{o}:{g}:{p}" for o in TASK_NAMES
+               for g in GROUPS[:1] for p in PARAM_NAMES]
+            + ["bogus", "args:bogus"])
+        refs = draw(st.lists(st.sampled_from(ref_pool),
+                             min_size=0, max_size=4))
+        task = {"command": "run " + " ".join(f"${{{r}}}" for r in refs)}
+        task.update(groups)
+        doc[tname] = task
+    return doc
+
+
+def _combos(params):
+    """Every combination of a task's declared parameter values."""
+    keys = sorted(params)
+    for values in itertools.product(*(params[k] for k in keys)):
+        yield dict(zip(keys, values))
+
+
+def _render_all(spec):
+    """Render every task's command over every one of its combos, with
+    the full inter-task scope — the runtime's exact resolution path."""
+    params = {t: task.parameters() for t, task in spec.tasks.items()}
+    anchor = {t: {k: v[0] for k, v in p.items()}
+              for t, p in params.items()}
+    for tname, task in spec.tasks.items():
+        tmpl = compile_template(task.command)
+        for combo in _combos(params[tname]):
+            studies = dict(anchor)
+            studies[tname] = combo
+            tmpl.render(combo, tname, studies)
+
+
+@settings(max_examples=80, deadline=None)
+@given(study_docs())
+def test_zero_error_lint_implies_every_instance_renders(doc):
+    spec = parse_dict(doc, validate=False)
+    report = lint(spec)
+    if report.errors:
+        return    # vacuous branch of the implication
+    _render_all(spec)    # must not raise
+
+
+@settings(max_examples=80, deadline=None)
+@given(study_docs())
+def test_render_failure_implies_an_error_finding(doc):
+    spec = parse_dict(doc, validate=False)
+    try:
+        _render_all(spec)
+    except InterpolationError:
+        report = lint(spec)
+        assert report.errors, \
+            "a study that cannot render must not lint clean"
+        assert {f.rule for f in report.errors} <= {"E101", "E102"}

@@ -1,0 +1,251 @@
+"""Engine lock-order auditor (``repro.core.locklint``).
+
+Covers: acquisition-order edge recording (including non-LIFO release
+and cross-thread traces), cycle detection with canonical dedup,
+``assert_no_cycles``, the ``make_lock`` factory's creation-time env
+gating, ``Condition`` compatibility (the gang-coordination path), the
+E901/I601 bridge into the lint report formatter, and an end-to-end
+smoke: the lane pool under ``PAPAS_LOCKLINT=1`` runs a study with an
+instrumented lock and a cycle-free graph.
+"""
+import threading
+
+import pytest
+
+from repro.core import (
+    InstrumentedLock, LaneWorkerPool, LockOrderAuditor, LockOrderError,
+    Scheduler, TaskDAG, TaskNode, get_auditor, make_lock,
+)
+from repro.core.lint import findings_from_lock_report
+from repro.core.locklint import enabled
+
+
+def _locks(auditor, *names):
+    return [InstrumentedLock(n, auditor) for n in names]
+
+
+class TestAuditor:
+    def test_nested_acquisition_records_an_edge(self):
+        aud = LockOrderAuditor()
+        a, b = _locks(aud, "a", "b")
+        with a:
+            with b:
+                pass
+        assert aud.locks == {"a", "b"}
+        assert aud.edges == {("a", "b"): 1}
+        assert aud.n_acquisitions == 2
+
+    def test_disjoint_acquisitions_record_no_edge(self):
+        aud = LockOrderAuditor()
+        a, b = _locks(aud, "a", "b")
+        with a:
+            pass
+        with b:
+            pass
+        assert aud.edges == {}
+
+    def test_edge_counts_accumulate(self):
+        aud = LockOrderAuditor()
+        a, b = _locks(aud, "a", "b")
+        for _ in range(3):
+            with a, b:
+                pass
+        assert aud.edges[("a", "b")] == 3
+
+    def test_non_lifo_release_keeps_stack_consistent(self):
+        # hand-over-hand: acquire a, acquire b, release a, acquire c —
+        # the c edge must come from b only, a is no longer held
+        aud = LockOrderAuditor()
+        a, b, c = _locks(aud, "a", "b", "c")
+        a.acquire()
+        b.acquire()
+        a.release()
+        c.acquire()
+        c.release()
+        b.release()
+        assert ("a", "b") in aud.edges
+        assert ("b", "c") in aud.edges
+        assert ("a", "c") not in aud.edges
+
+    def test_reacquire_same_name_is_not_a_self_edge(self):
+        aud = LockOrderAuditor()
+        (a,) = _locks(aud, "a")
+        a2 = InstrumentedLock("a", aud)
+        with a, a2:
+            pass
+        assert aud.edges == {}
+
+
+class TestCycles:
+    def _cycle_auditor(self):
+        aud = LockOrderAuditor()
+        a, b = _locks(aud, "a", "b")
+        # opposite orders recorded by two (non-overlapping) threads —
+        # exactly the latent deadlock the auditor exists to catch
+        t1 = threading.Thread(target=lambda: [a.acquire(), b.acquire(),
+                                              b.release(), a.release()])
+        t1.start()
+        t1.join()
+        t2 = threading.Thread(target=lambda: [b.acquire(), a.acquire(),
+                                              a.release(), b.release()])
+        t2.start()
+        t2.join()
+        return aud
+
+    def test_opposite_orders_are_a_cycle(self):
+        aud = self._cycle_auditor()
+        assert aud.cycles() == [["a", "b"]]
+
+    def test_assert_no_cycles_raises(self):
+        aud = self._cycle_auditor()
+        with pytest.raises(LockOrderError, match="a -> b -> a"):
+            aud.assert_no_cycles()
+
+    def test_consistent_order_has_no_cycle(self):
+        aud = LockOrderAuditor()
+        a, b, c = _locks(aud, "a", "b", "c")
+        with a, b, c:
+            pass
+        with a, c:
+            pass
+        assert aud.cycles() == []
+        aud.assert_no_cycles()
+
+    def test_cycle_reported_once_despite_repetition(self):
+        aud = self._cycle_auditor()
+        a, b = _locks(aud, "a", "b")
+        with a, b:
+            pass
+        assert len(aud.cycles()) == 1
+
+    def test_three_lock_cycle(self):
+        aud = LockOrderAuditor()
+        a, b, c = _locks(aud, "a", "b", "c")
+        for first, second in ((a, b), (b, c), (c, a)):
+            with first, second:
+                pass
+        assert aud.cycles() == [["a", "b", "c"]]
+
+    def test_report_is_json_friendly(self):
+        aud = self._cycle_auditor()
+        rep = aud.report()
+        assert rep["locks"] == ["a", "b"]
+        assert rep["n_acquisitions"] == 4
+        assert {"from": "a", "to": "b", "count": 1} in rep["edges"]
+        assert rep["cycles"] == [["a", "b"]]
+
+    def test_reset_clears_state(self):
+        aud = self._cycle_auditor()
+        aud.reset()
+        assert aud.report() == {"locks": [], "n_acquisitions": 0,
+                                "edges": [], "cycles": []}
+
+
+class TestFactory:
+    def test_disabled_returns_plain_lock(self, monkeypatch):
+        monkeypatch.delenv("PAPAS_LOCKLINT", raising=False)
+        assert not enabled()
+        assert not isinstance(make_lock("x"), InstrumentedLock)
+
+    def test_zero_means_disabled(self, monkeypatch):
+        monkeypatch.setenv("PAPAS_LOCKLINT", "0")
+        assert not enabled()
+        assert not isinstance(make_lock("x"), InstrumentedLock)
+
+    def test_enabled_returns_instrumented_lock(self, monkeypatch):
+        monkeypatch.setenv("PAPAS_LOCKLINT", "1")
+        lk = make_lock("factory.test")
+        assert isinstance(lk, InstrumentedLock)
+        assert lk.name == "factory.test"
+
+    def test_instrumented_lock_duck_types(self, monkeypatch):
+        monkeypatch.setenv("PAPAS_LOCKLINT", "1")
+        lk = make_lock("duck")
+        assert lk.acquire() is True
+        assert lk.locked()
+        lk.release()
+        assert not lk.locked()
+        assert lk.acquire(blocking=False) is True
+        lk.release()
+
+    def test_condition_over_instrumented_lock(self):
+        # the gang path wraps the pool lock in a Condition: wait/notify
+        # must work and the _is_owned try-acquire probe must stay
+        # balanced in the auditor's per-thread stack
+        aud = LockOrderAuditor()
+        cv = threading.Condition(InstrumentedLock("pool", aud))
+        ready = []
+
+        def waiter():
+            with cv:
+                while not ready:
+                    cv.wait(timeout=5)
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        with cv:
+            ready.append(1)
+            cv.notify()
+        t.join(timeout=5)
+        assert not t.is_alive()
+        assert aud.cycles() == []
+
+
+class TestLintBridge:
+    def test_cycles_become_e901_errors(self):
+        aud = LockOrderAuditor()
+        a, b = _locks(aud, "a", "b")
+        with a, b:
+            pass
+        with b, a:
+            pass
+        rep = findings_from_lock_report(aud.report())
+        assert not rep.ok
+        (f,) = rep.errors
+        assert f.rule == "E901"
+        assert "a -> b -> a" in f.message
+
+    def test_clean_graph_is_an_info_summary(self):
+        aud = LockOrderAuditor()
+        a, b = _locks(aud, "a", "b")
+        with a, b:
+            pass
+        rep = findings_from_lock_report(aud.report())
+        assert rep.ok and len(rep.findings) == 1
+        f = rep.findings[0]
+        assert f.severity == "info"
+        assert "2 lock(s)" in f.message and "no cycles" in f.message
+
+
+class TestEngineSmoke:
+    def test_lane_pool_under_locklint_is_cycle_free(self, monkeypatch):
+        monkeypatch.setenv("PAPAS_LOCKLINT", "1")
+        aud = get_auditor()
+        aud.reset()
+        dag = TaskDAG()
+        for i in range(6):
+            dag.add(TaskNode(id=f"t{i:03d}", task="t", combo={},
+                             payload={"command": f"echo {i}"}))
+        pool = LaneWorkerPool(
+            2, render=lambda n: (n.payload["command"], {}))
+        try:
+            res = Scheduler(slots=2).execute(dag, None, pool=pool)
+        finally:
+            pool.shutdown()
+        assert all(r.status == "ok" for r in res.values())
+        assert "lane.pool" in aud.locks
+        assert aud.n_acquisitions > 0
+        aud.assert_no_cycles()
+        assert findings_from_lock_report(aud.report()).ok
+        aud.reset()
+
+    def test_journal_lock_is_instrumented(self, monkeypatch, tmp_path):
+        monkeypatch.setenv("PAPAS_LOCKLINT", "1")
+        aud = get_auditor()
+        aud.reset()
+        from repro.core import StudyJournal
+        j = StudyJournal(tmp_path / "journal.json")
+        j.mark_complete("t000")
+        assert "journal" in aud.locks
+        aud.assert_no_cycles()
+        aud.reset()
