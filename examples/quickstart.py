@@ -38,6 +38,14 @@ lanes with ``keep_results=False``, then *asserts* the streamed
 speedup/efficiency pivot — the stand-in scales perfectly, so speedup
 must equal the thread count — and that the offline report from
 ``records.jsonl`` reproduces the live table cell for cell.
+
+    PYTHONPATH=src python examples/quickstart.py --chaos lane|host|sigkill
+
+runs the deterministic fault-injection smokes (``repro.core.chaos`` +
+the canned plans in ``examples/chaos/``): lane-worker kills retried to
+a byte-identical record set, host failures quarantined and *recovered*
+through probation, and a mid-run SIGKILL + torn journal segment that
+resume must replay exactly — the CI chaos gate runs all three.
 """
 import argparse
 import resource
@@ -195,6 +203,158 @@ def run_perf_report(window: int = 16, slots: int = 2) -> None:
           f"offline table reproduces the live one")
 
 
+# -- chaos smokes ----------------------------------------------------------
+# deterministic fault injection (repro.core.chaos): each smoke loads a
+# canned plan from examples/chaos/, injects the faults through a real
+# backend seam, and asserts the engine's recovery invariant — the
+# surviving record set is byte-identical to a fault-free run's
+# (record_fingerprint), or the lost capacity is reported as degraded.
+
+CHAOS_DIR = Path(__file__).parent / "chaos"
+CHAOS_ROOT = Path("/tmp/papas_quickstart")
+
+
+def _fresh_study(name: str, **kwargs) -> ParameterStudy:
+    """The reduced shell study under a wiped per-smoke directory."""
+    import shutil
+    shutil.rmtree(CHAOS_ROOT / name, ignore_errors=True)
+    return ParameterStudy(parse_yaml(REMOTE_WDL), root=CHAOS_ROOT,
+                          name=name, **kwargs)
+
+
+def run_chaos_lane(slots: int = 2) -> None:
+    """Lane-kill chaos smoke: run the study clean, then under a
+    kill_lane plan with retry backoff — every injected death must be
+    retried to success and the record sets must match byte for byte."""
+    from repro.core import FaultPlan, record_fingerprint
+
+    plan = FaultPlan.load(CHAOS_DIR / "lane_kill.yaml")
+    clean = _fresh_study("chaos_lane_clean")
+    clean.run(pool="lane", slots=slots)
+    fp_clean = record_fingerprint(clean.db.records())
+
+    faulty = _fresh_study("chaos_lane")
+    ctrl = plan.controller()
+    results = faulty.run(pool="lane", slots=slots, chaos=ctrl,
+                         max_retries=3, retry={"base": 0.01})
+    assert len(ctrl.ledger) >= 1, "chaos:lane — plan injected nothing"
+    assert all(r.status == "ok" for r in results.values()), \
+        "chaos:lane — a killed task was not retried to success"
+    fp = record_fingerprint(faulty.db.records())
+    assert fp == fp_clean, \
+        "chaos:lane — record set diverges from the fault-free run"
+    meta = faulty.db.read_meta()
+    assert meta.get("degraded") and meta.get("fault_ledger"), \
+        "chaos:lane — study.json missing the degraded fault ledger"
+    print(f"[chaos:lane] {len(ctrl.ledger)} lane kill(s) injected; "
+          f"{len(results)} tasks recovered; record fingerprints match "
+          f"({len(fp)} entries)")
+
+
+def run_chaos_host() -> None:
+    """Host-probation chaos smoke: 'flaky' refuses its first dispatches
+    by plan, is quarantined with backoff, then answers its probe — it
+    must recover and serve work again, never turn permanently dead."""
+    from repro.core import (FaultPlan, LocalTransport, ShellResult,
+                            SSHWorkerPool)
+
+    plan = FaultPlan.load(CHAOS_DIR / "host_quarantine.yaml")
+    study = _fresh_study("chaos_host")
+
+    def hook(host, command):
+        # the healthy host is deliberately slow, so the queue is still
+        # live when "flaky" finishes probation and takes its probe
+        time.sleep(0.08 if host == "ok" else 0.005)
+        return ShellResult(0, host, "", 0)
+
+    pool = SSHWorkerPool(["flaky", "ok"], ppnode=1,
+                         transport=LocalTransport(hook=hook),
+                         render=study.render_node, probation=0.05)
+    ctrl = plan.controller()
+    try:
+        results = study.run(pool=pool, chaos=ctrl, max_retries=3)
+    finally:
+        pool.shutdown()
+    assert all(r.status == "ok" for r in results.values()), \
+        "chaos:host — tasks failed despite a recoverable host"
+    assert "flaky" not in pool.dead_hosts, \
+        "chaos:host — probation declared a recoverable host dead"
+    assert len(ctrl.ledger) == 2, \
+        f"chaos:host — expected 2 injected failures, got {len(ctrl.ledger)}"
+    served = {r.host for r in results.values()}
+    assert "flaky" in served, \
+        f"chaos:host — recovered host served nothing (hosts: {served})"
+    print(f"[chaos:host] flaky failed {len(ctrl.ledger)}x, was "
+          f"quarantined, probed back, and served "
+          f"{sum(1 for r in results.values() if r.host == 'flaky')} "
+          f"task(s); dead_hosts={sorted(pool.dead_hosts) or '{}'}")
+
+
+def run_chaos_child() -> None:
+    """(internal) the SIGKILL smoke's victim: runs the crash study under
+    the sigkill plan — by construction this process never returns."""
+    from repro.core import FaultPlan
+
+    plan = FaultPlan.load(CHAOS_DIR / "sigkill_resume.yaml")
+    study = ParameterStudy(parse_yaml(REMOTE_WDL), root=CHAOS_ROOT,
+                           name="chaos_crash",
+                           flush_count=1, flush_interval=None)
+    study.run(pool="lane", slots=2, chaos=plan)
+    raise SystemExit("chaos child survived its own sigkill plan")
+
+
+def run_chaos_sigkill() -> None:
+    """Crash-resume chaos smoke: a child process is SIGKILLed mid-run
+    by plan, a journal append segment's tail is torn (the crash shape),
+    and resume must replay to the exact fault-free record set — then a
+    second resume must be a no-op (idempotent)."""
+    import os
+    import subprocess
+    import sys
+    import warnings
+    from repro.core import FaultPlan, record_fingerprint
+
+    clean = _fresh_study("chaos_crash_clean")
+    clean.run(pool="lane", slots=2)
+    fp_clean = record_fingerprint(clean.db.records())
+
+    _fresh_study("chaos_crash")         # wipe the crash directory
+    proc = subprocess.run([sys.executable, __file__, "--chaos-child"],
+                          env=os.environ.copy(), capture_output=True,
+                          text=True, timeout=120)
+    assert proc.returncode == -9, \
+        (f"chaos:sigkill — child exited {proc.returncode}, expected "
+         f"SIGKILL (-9); stderr:\n{proc.stderr}")
+    print("[chaos:sigkill] child killed mid-run by plan (rc=-9)")
+
+    plan = FaultPlan.load(CHAOS_DIR / "sigkill_resume.yaml")
+    study = ParameterStudy(parse_yaml(REMOTE_WDL), root=CHAOS_ROOT,
+                           name="chaos_crash",
+                           flush_count=1, flush_interval=None)
+    torn = plan.controller().apply_file_faults(study.db.dir)
+    assert torn, "chaos:sigkill — no journal segment left to tear"
+    print(f"[chaos:sigkill] tore segment tail: "
+          f"{', '.join(p.name for p in torn)}")
+    with warnings.catch_warnings():
+        # the torn entry warns-and-drops by design
+        warnings.simplefilter("ignore", RuntimeWarning)
+        study.run(pool="lane", slots=2, resume=True)
+        fp = record_fingerprint(study.db.records())
+        assert fp == fp_clean, \
+            "chaos:sigkill — resume diverged from the fault-free record set"
+        n_recs = sum(1 for _ in study.db.records())
+        again = ParameterStudy(parse_yaml(REMOTE_WDL), root=CHAOS_ROOT,
+                               name="chaos_crash",
+                               flush_count=1, flush_interval=None)
+        again.run(pool="lane", slots=2, resume=True)
+        assert sum(1 for _ in again.db.records()) == n_recs, \
+            "chaos:sigkill — a second resume appended records (not idempotent)"
+        assert record_fingerprint(again.db.records()) == fp_clean
+    print(f"[chaos:sigkill] resume replayed to the pre-crash set "
+          f"({len(fp)} records, fingerprints match); second resume "
+          f"idempotent")
+
+
 # lint smoke: a study seeded with one of every static-defect class the
 # analyzer must catch — never runnable, only linted
 BROKEN_WDL = """
@@ -280,7 +440,24 @@ def main():
                     help="run the static-analysis smoke (clean example "
                          "+ seeded-defect study through the findings "
                          "formatters)")
+    ap.add_argument("--chaos", default=None,
+                    choices=("lane", "host", "sigkill"),
+                    help="run a deterministic fault-injection smoke "
+                         "(examples/chaos/ plans): 'lane' kills lane "
+                         "workers and asserts record-set equivalence, "
+                         "'host' drives quarantine + probation recovery, "
+                         "'sigkill' crashes mid-run, tears a journal "
+                         "segment, and asserts resume equivalence")
+    ap.add_argument("--chaos-child", action="store_true",
+                    help=argparse.SUPPRESS)
     args = ap.parse_args()
+    if args.chaos_child:
+        run_chaos_child()
+        return
+    if args.chaos:
+        {"lane": run_chaos_lane, "host": run_chaos_host,
+         "sigkill": run_chaos_sigkill}[args.chaos]()
+        return
     if args.lint:
         run_lint()
         return

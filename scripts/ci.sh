@@ -57,7 +57,8 @@ import json
 doc = json.load(open("/tmp/papas_lint.json"))
 (rep,) = doc["files"].values()
 ids = {f["rule"] for f in rep["findings"]}
-want = {"E101", "E201", "E202", "E203", "E301", "E403", "E502", "W601"}
+want = {"E101", "E201", "E202", "E203", "E301", "E403", "E502", "W601",
+        "W701"}
 missing = want - ids
 assert not missing, f"lint gate: fixture rules not flagged: {sorted(missing)}"
 print(f"lint gate: fixture flagged {len(want)} seeded rule id(s)")
@@ -107,6 +108,21 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py \
 # records.jsonl report reproduces the live table
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py \
     --report
+
+# chaos gate: deterministic fault injection through every backend seam
+# (canned plans in examples/chaos/) — lane-worker kills retried to a
+# byte-identical record set, host failure quarantined then *recovered*
+# through probation, and a mid-run SIGKILL + torn journal segment that
+# resume must replay exactly (idempotently).  The chaos suites are also
+# pinned by name so collection changes cannot drop them.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+    tests/test_chaos.py tests/test_chaos_props.py
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py \
+    --chaos lane
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py \
+    --chaos host
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py \
+    --chaos sigkill
 
 # short-task throughput floor: 10^4 no-op tasks through thread vs lane
 # vs windowed-lane vs lane+capture, plus per-lever rows (mux /

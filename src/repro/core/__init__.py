@@ -1,4 +1,12 @@
 """PaPaS core: parameter-study, workflow, cluster, visualization engines."""
+from .chaos import (
+    ChaosController,
+    FaultEvent,
+    FaultLedger,
+    FaultPlan,
+    record_fingerprint,
+    truncate_tail,
+)
 from .dag import DAGError, TaskDAG, TaskNode
 from .executors import (
     CompletionEvent,
@@ -54,6 +62,7 @@ from .results import (
     resolve_key,
 )
 from .remote import (
+    AllHostsQuarantinedError,
     BatchWorkerPool,
     LocalSubmitter,
     LocalTransport,
@@ -66,11 +75,13 @@ from .remote import (
     render_batch_script,
 )
 from .scheduler import (
+    RetryPolicy,
     ScheduleEvent,
     Scheduler,
     TaskResult,
     VirtualClock,
     VirtualPool,
+    classify_failure,
     dispatch_count,
     makespan,
 )
@@ -93,14 +104,16 @@ from .wdl import (
 )
 
 __all__ = [
+    "ChaosController", "FaultEvent", "FaultLedger", "FaultPlan",
+    "record_fingerprint", "truncate_tail",
     "DAGError", "TaskDAG", "TaskNode",
     "CompletionEvent", "GangExecutor", "GangPool", "GangStats", "InlinePool",
     "LaneStats", "LaneWorkerPool", "ProcessWorkerPool", "ShellResult",
     "ThreadWorkerPool", "WorkerPool", "make_pool", "merged_env",
     "run_subprocess", "stackable_key",
-    "BatchWorkerPool", "LocalSubmitter", "LocalTransport",
-    "SchedulerSubmitter", "SSHTransport", "SSHWorkerPool", "Transport",
-    "TransportError", "parse_hosts", "render_batch_script",
+    "AllHostsQuarantinedError", "BatchWorkerPool", "LocalSubmitter",
+    "LocalTransport", "SchedulerSubmitter", "SSHTransport", "SSHWorkerPool",
+    "Transport", "TransportError", "parse_hosts", "render_batch_script",
     "CompiledEnviron", "CompiledTemplate", "InterpolationError",
     "classify_reference",
     "compile_environ", "compile_template", "interpolate", "render_command",
@@ -114,8 +127,9 @@ __all__ = [
     "KeyResolutionError", "MetricStats", "ResultsAggregator",
     "build_capture_sets", "infer_scalar", "parse_capture", "parse_captures",
     "resolve_key",
-    "ScheduleEvent", "Scheduler", "TaskResult", "VirtualClock", "VirtualPool",
-    "dispatch_count", "makespan",
+    "RetryPolicy", "ScheduleEvent", "Scheduler", "TaskResult",
+    "VirtualClock", "VirtualPool", "classify_failure", "dispatch_count",
+    "makespan",
     "JournalState", "StudyJournal", "compress_ranges", "expand_ranges",
     "collect_outputs", "stage_instance",
     "InstanceWindow", "ParameterStudy", "load_study",

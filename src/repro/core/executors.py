@@ -53,6 +53,7 @@ from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from pathlib import Path
 from typing import Any, Callable, Hashable, Mapping, Sequence, TYPE_CHECKING
 
+from . import chaos
 from .dag import TaskNode
 from .locklint import make_lock
 
@@ -563,6 +564,10 @@ class LaneWorkerPool(WorkerPool):
         self.reuse_spool = (not capture_stderr if reuse_spool is None
                             else reuse_spool)
         self.stats = LaneStats()
+        # chaos capture at construction (the make_lock pattern): when no
+        # plan is armed this is None and the frame hot path pays one
+        # identity check
+        self._chaos = chaos.current()
         self._base_env = dict(os.environ)   # snapshot once per pool
         # per-pool random rc sentinel: task stdout flows back inline over
         # the lane pipe, framed by a marker real output cannot guess
@@ -1033,6 +1038,16 @@ class LaneWorkerPool(WorkerPool):
                 self._observe(runtime)
                 job.head_started = now
                 job.head_deadline = None
+                if self._chaos is not None \
+                        and self._chaos.lane_frame(lane.idx) \
+                        and lane.proc is not None:
+                    # injected lane death: SIGKILL the worker mid-batch
+                    # and let the existing death path (_on_lane_dead)
+                    # harvest flushed frames, charge the read head, and
+                    # respawn — the exact recovery a real crash takes
+                    lane.death_msg = "lane worker died"
+                    self._kill(lane.proc)
+                    break
                 self._arm_deadline(lane, now)
         if not job.pending and not lane.dying:
             self._finish_lane_job(sel, lane, idle, now)

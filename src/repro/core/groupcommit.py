@@ -19,15 +19,47 @@ Both writers are deliberately lock-free: ``StudyJournal`` and
 ``StudyDB`` call them under their own locks, which also guard the
 surrounding document state.  Readers get buffered-entry visibility
 through ``pending()``.
+
+Crash semantics: ``pre_flush`` is a hook fired before a non-empty
+batch physically writes — the study engine points the *journal's* hook
+at the provenance DB's flush, so a journal entry can never become
+durable before the record it refers to (a crash may lose a completion,
+which resume simply re-runs, but never a record for a completion the
+journal kept).  On the read side, ``iter_jsonl`` is the
+corruption-tolerant segment reader every loader shares: a SIGKILL
+mid-``write()`` legitimately leaves a torn final line, and a resume
+that refuses to load over one torn record would turn a survivable
+crash into data loss.
 """
 from __future__ import annotations
 
+import json
 import re
 import time
+import warnings
 from pathlib import Path
-from typing import Any
+from typing import Any, Callable, Iterator
 
 _SEG_RE = re.compile(r"\.s(\d+)$")
+
+
+def iter_jsonl(path: Path, label: str = "record") -> Iterator[Any]:
+    """Stream JSON values from a line-oriented segment, tolerating
+    corruption: a line that does not parse (torn tail from a crash
+    mid-write, truncated segment) is dropped with a ``RuntimeWarning``
+    instead of refusing the whole load."""
+    with Path(path).open() as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                yield json.loads(line)
+            except ValueError:
+                warnings.warn(
+                    f"{label} {Path(path).name}:{lineno}: dropping "
+                    f"corrupt/truncated entry ({line[:60]!r})",
+                    RuntimeWarning, stacklevel=2)
 
 
 class GroupCommitWriter:
@@ -40,6 +72,9 @@ class GroupCommitWriter:
         self.flush_interval = flush_interval
         self.n_appends = 0          # lines handed to append()
         self.n_flushes = 0          # group flushes actually performed
+        #: fired before a non-empty batch physically writes — the
+        #: durability-ordering seam (see module docstring)
+        self.pre_flush: Callable[[], None] | None = None
         self._buf: list[str] = []
         self._file: Any = None      # single long-lived append handle
         self._last_flush = time.monotonic()
@@ -51,6 +86,7 @@ class GroupCommitWriter:
         state = self.__dict__.copy()
         state["_file"] = None
         state["_buf"] = []
+        state["pre_flush"] = None
         return state
 
     def append(self, line: str, force: bool = False) -> None:
@@ -72,6 +108,8 @@ class GroupCommitWriter:
     def flush(self) -> None:
         if not self._buf:
             return
+        if self.pre_flush is not None:
+            self.pre_flush()
         if self._file is None:
             self.path.parent.mkdir(parents=True, exist_ok=True)
             self._file = self.path.open("a")
@@ -150,10 +188,12 @@ class ShardedGroupCommit:
         del self._writers[shards:]
         fc = self._writers[0].flush_count
         fi = self._writers[0].flush_interval
+        pf = self._writers[0].pre_flush
         while len(self._writers) < shards:
-            self._writers.append(
-                GroupCommitWriter(self._shard_path(len(self._writers)),
-                                  fc, fi))
+            w = GroupCommitWriter(self._shard_path(len(self._writers)),
+                                  fc, fi)
+            w.pre_flush = pf
+            self._writers.append(w)
         self._rr = 0
 
     def segment_paths(self) -> list[Path]:
@@ -226,3 +266,9 @@ class ShardedGroupCommit:
             if prev is None:
                 prev = p
         return prev if prev is not None else (flush_count, flush_interval)
+
+    def set_pre_flush(self, fn: Callable[[], None] | None) -> None:
+        """Install (or clear) the pre-flush hook on every shard —
+        future shards created by ``set_shards`` inherit it."""
+        for w in self._writers:
+            w.pre_flush = fn

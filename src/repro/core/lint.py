@@ -39,6 +39,7 @@ E505 error conflicting remote keywords across tasks
 E506 error conflicting ``straggler_quantile`` across tasks
 W601 warn  estimated sweep runtime exceeds the study budget
 I601 info  sweep cost estimate (count × duration / slots)
+W701 warn  retry backoff ceiling exceeds the task timeout
 E901 error engine lock acquisition-order cycle (locklint pack)
 == ======= ====================================================
 
@@ -141,6 +142,7 @@ RULES: dict[str, Rule] = {r.id: r for r in (
     Rule("E506", "error", "conflicting straggler_quantile"),
     Rule("W601", "warn", "estimated runtime exceeds budget"),
     Rule("I601", "info", "sweep cost estimate"),
+    Rule("W701", "warn", "retry backoff ceiling exceeds task timeout"),
     Rule("E901", "error", "lock acquisition-order cycle"),
 )}
 
@@ -658,6 +660,37 @@ def check_cost(ctx: LintContext) -> None:
                  f"{ctx.max_runtime_days:g}-day budget: {detail}")
     else:
         ctx.emit("I601", f"estimated sweep cost: {detail}")
+
+
+@check
+def check_retry(ctx: LintContext) -> None:
+    """W701 — the retry backoff must not outlive the task it retries.
+
+    The worst-case single backoff delay (``RetryPolicy.ceiling``: the
+    last exponential step, jitter included) is compared against the
+    task's declared ``timeout:`` — a policy that waits longer between
+    attempts than the task is even allowed to run idles slots for no
+    recovery benefit, and usually means ``base:`` was given in the
+    wrong unit."""
+    from .scheduler import RetryPolicy
+    for tname, task in ctx.spec.tasks.items():
+        if not task.retry or task.timeout is None:
+            continue
+        try:
+            policy = RetryPolicy.from_any(task.retry)
+        except ValueError:
+            continue         # shape errors are the parser's to report
+        ceil = policy.ceiling()
+        timeout = float(task.timeout)
+        if ceil > timeout:
+            ctx.emit(
+                "W701",
+                f"worst-case retry backoff {_fmt_duration(ceil)} "
+                f"(max={policy.retries(1)}, {policy.backoff}, "
+                f"base={policy.base:g}s) exceeds the task timeout "
+                f"{_fmt_duration(timeout)} — retries would idle the "
+                f"slot longer than the task may run",
+                task=tname, keyword="retry")
 
 
 # ---------------------------------------------------------------------------

@@ -35,7 +35,7 @@ from contextlib import contextmanager
 from pathlib import Path
 from typing import Any, Iterator, Mapping
 
-from .groupcommit import ShardedGroupCommit
+from .groupcommit import ShardedGroupCommit, iter_jsonl
 from .locklint import make_lock
 
 
@@ -163,11 +163,9 @@ class StudyDB:
             return iter(())
 
         def _it(path: Path) -> Iterator[dict[str, Any]]:
-            with path.open() as f:
-                for line in f:
-                    line = line.strip()
-                    if line:
-                        yield json.loads(line)
+            # corruption-tolerant: a torn tail (crash mid-write) warns
+            # and drops that record instead of refusing the whole DB
+            yield from iter_jsonl(path, "provenance")
         if len(paths) == 1:
             return _it(paths[0])
         # per-segment streams are timestamp-ordered (appends are

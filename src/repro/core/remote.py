@@ -13,9 +13,13 @@ Two backends, zero scheduler changes:
   accounting, injected host failures, and scripted results, so the
   remote path is exercised without any network.  A host whose transport
   fails (connection refused, ssh exit 255, injected fault) is
-  quarantined: its lanes retire, in-flight work on it reports a failed
-  attempt, and the scheduler's normal retry re-dispatches onto a
-  surviving host.
+  quarantined *on probation*: its lanes back off (exponentially in the
+  strike count) and re-probe instead of dying outright, so a transient
+  outage heals; only a host failing its ``max_probes`` probes too is
+  quarantined permanently, its lanes retire, and the scheduler's normal
+  retry re-dispatches the failed attempts onto a surviving host.  When
+  every host goes down, queued work fails with a structured
+  ``AllHostsQuarantinedError`` carrying each host's last failure cause.
 * ``BatchWorkerPool`` — the paper's single-cluster-job technique:
   ``take`` claims up to ``nnodes × ppnode`` ready tasks as one group,
   renders a SLURM/PBS submission script that runs the whole group
@@ -48,6 +52,7 @@ import time
 from pathlib import Path
 from typing import Any, Callable, Mapping, Sequence, TYPE_CHECKING
 
+from . import chaos as _chaos
 from .dag import TaskNode
 from .locklint import make_lock
 from .executors import (
@@ -67,6 +72,23 @@ _CANCELLED = "cancelled: dispatch abandoned by scheduler"
 class TransportError(RuntimeError):
     """Host-level failure (unreachable, ssh refused, allocation lost) —
     distinct from a task's own nonzero exit, which is data."""
+
+
+class AllHostsQuarantinedError(TransportError):
+    """Every host in an ``SSHWorkerPool`` is permanently quarantined.
+
+    Carries ``causes`` — host → the last transport failure that killed
+    it — so callers (and the degraded-run report) see *why* the pool
+    died, not just that it did.  ``str()`` keeps the historical
+    ``no live hosts (all N quarantined)`` prefix."""
+
+    def __init__(self, causes: Mapping[str, str]) -> None:
+        self.causes = dict(causes)
+        detail = "; ".join(f"{h}: {c}"
+                           for h, c in sorted(self.causes.items()))
+        super().__init__(
+            f"no live hosts (all {len(self.causes)} quarantined)"
+            + (f" — {detail}" if detail else ""))
 
 
 def parse_hosts(hosts: "str | Sequence[str]") -> list[str]:
@@ -224,6 +246,18 @@ class LocalTransport(Transport):
     def start(self, host: str, command: str,
               env: Mapping[str, str] | None = None,
               cwd: str | None = None) -> RemoteProcess:
+        ctrl = _chaos.current()
+        if ctrl is not None:
+            act = ctrl.host_action(host)
+            if act is not None:
+                kind, delay = act
+                if kind == "hang_host":
+                    # stall the dispatch (trips task timeouts); runs on
+                    # the worker thread, never the event loop
+                    time.sleep(delay)
+                else:
+                    raise TransportError(
+                        f"host {host} unreachable (chaos)")
         if host in self.fail_hosts:
             raise TransportError(f"host {host} unreachable (injected)")
         t0 = time.monotonic()
@@ -270,6 +304,13 @@ class SSHWorkerPool(WorkerPool):
     payload ``command`` key is used; a node with neither fails its
     attempt with a clear error (registry callables cannot be shipped
     over ssh).
+
+    Quarantine is probational: a host's first transport failure parks
+    it for ``probation`` seconds (doubling per strike); the next
+    dispatch after the backoff is its probe, and a success clears the
+    strikes.  A host failing ``max_probes`` probes beyond the first
+    strike joins ``dead_hosts`` permanently.  ``probation=0`` restores
+    the legacy die-on-first-failure behavior.
     """
 
     kind = "ssh"
@@ -281,6 +322,8 @@ class SSHWorkerPool(WorkerPool):
         transport: Transport | None = None,
         render: RenderFn | None = None,
         cwd: str | None = None,
+        probation: float = 0.25,
+        max_probes: int = 2,
     ) -> None:
         self.hosts = parse_hosts(hosts)
         if ppnode < 1:
@@ -290,12 +333,22 @@ class SSHWorkerPool(WorkerPool):
         self.transport = transport or SSHTransport()
         self.render = render
         self.cwd = cwd
+        self.probation = max(0.0, float(probation))
+        self.max_probes = max(0, int(max_probes))
         self._pending: "queue.Queue[_RemoteDispatch | None]" = queue.Queue()
         self._events: "queue.Queue[CompletionEvent]" = queue.Queue()
         self._lock = make_lock("ssh.pool")
         self._procs: dict[int, RemoteProcess] = {}
         self._cancelled: set[int] = set()
         self.dead_hosts: set[str] = set()
+        #: host → probation expiry (monotonic); absent = not quarantined
+        self.quarantine: dict[str, float] = {}
+        #: host → last transport failure message (feeds the structured
+        #: ``AllHostsQuarantinedError`` and the degraded-run report)
+        self.host_causes: dict[str, str] = {}
+        self._strikes: dict[str, int] = {}
+        #: set when the pool drained with every host dead
+        self.all_quarantined: AllHostsQuarantinedError | None = None
         self._live = self.slots
         self._shutdown = False
         self._threads = [
@@ -365,17 +418,29 @@ class SSHWorkerPool(WorkerPool):
                     return
                 with self._lock:
                     host_dead = host in self.dead_hosts
+                    until = self.quarantine.get(host)
                 if host_dead:
                     self._pending.put(item)  # hand off to a live lane
                     return
+                if until is not None:
+                    now = time.monotonic()
+                    if now < until:
+                        # quarantined: hand the work back rather than
+                        # dispatch into a known-bad host, and wait out
+                        # the probation backoff in bounded naps so
+                        # shutdown stays responsive
+                        self._pending.put(item)
+                        if self._shutdown:
+                            return
+                        time.sleep(min(until - now, 0.05))
+                        continue
+                    # backoff elapsed: this dispatch is the probe
                 if item.token in self._cancelled:
                     self._emit(item, [None] * len(item.nodes),
                                [_CANCELLED] * len(item.nodes), host)
                     continue
-                host_failed = self._run_dispatch(item, host)
-                if host_failed:
-                    with self._lock:
-                        self.dead_hosts.add(host)
+                cause = self._run_dispatch(item, host)
+                if cause is not None and self._host_struck(host, cause):
                     return
         finally:
             with self._lock:
@@ -384,33 +449,67 @@ class SSHWorkerPool(WorkerPool):
             if last and not self._shutdown:
                 self._drain_pending()
 
-    def _run_dispatch(self, item: _RemoteDispatch, host: str) -> bool:
-        """Run one dispatch on ``host``; True means the host failed."""
+    def _host_struck(self, host: str, cause: str) -> bool:
+        """Record one transport failure on ``host``.  Under probation
+        the host backs off ``probation × 2**(strikes-1)`` seconds and
+        is re-probed, up to ``max_probes`` probes; past that (or with
+        probation disabled) it dies permanently.  True → this lane
+        should retire."""
+        with self._lock:
+            strikes = self._strikes.get(host, 0) + 1
+            self._strikes[host] = strikes
+            self.host_causes[host] = cause
+            if self.probation > 0 and strikes <= self.max_probes:
+                self.quarantine[host] = (
+                    time.monotonic()
+                    + self.probation * (2 ** min(strikes - 1, 16)))
+                return False
+            self.quarantine.pop(host, None)
+            self.dead_hosts.add(host)
+            return True
+
+    def _host_recovered(self, host: str) -> None:
+        """A successful dispatch on a previously-striking host: the
+        probe passed, so quarantine and strikes clear."""
+        with self._lock:
+            if host in self._strikes:
+                self._strikes.pop(host, None)
+                self.quarantine.pop(host, None)
+
+    def _run_dispatch(self, item: _RemoteDispatch,
+                      host: str) -> "str | None":
+        """Run one dispatch on ``host``; a non-None return is the
+        transport failure that means the host failed."""
         t0 = time.monotonic()
         values: list[Any] = []
         errors: list[str | None] = []
-        host_failed = False
+        cause: "str | None" = None
+        ran_any = False
         for node in item.nodes:
-            if host_failed or item.token in self._cancelled:
+            if cause is not None or item.token in self._cancelled:
                 values.append(None)
-                errors.append(_CANCELLED if not host_failed
+                errors.append(_CANCELLED if cause is None
                               else f"host {host} failed earlier in batch")
                 continue
             try:
                 values.append(self._run_node(item.token, host, node))
                 errors.append(None)
+                ran_any = True
             except TransportError as e:
                 values.append(None)
                 errors.append(f"host {host} failed: {e}")
-                host_failed = True
+                cause = str(e)
             except Exception as e:  # noqa: BLE001 — fault isolation
                 values.append(None)
                 if item.token in self._cancelled:
                     errors.append(_CANCELLED)
                 else:
                     errors.append(f"{type(e).__name__}: {e}")
+                    ran_any = True
+        if cause is None and ran_any:
+            self._host_recovered(host)
         self._emit(item, values, errors, host, t0)
-        return host_failed
+        return cause
 
     def _emit(self, item: _RemoteDispatch, values: list[Any],
               errors: list[str | None], host: str,
@@ -422,7 +521,18 @@ class SSHWorkerPool(WorkerPool):
 
     def _drain_pending(self) -> None:
         """No live lanes remain: fail queued dispatches instead of
-        leaving the scheduler blocked on events that can never come."""
+        leaving the scheduler blocked on events that can never come.
+        The error is the structured ``AllHostsQuarantinedError`` —
+        per-host causes included — stashed on ``all_quarantined`` for
+        callers that want more than the message."""
+        with self._lock:
+            causes = {h: self.host_causes.get(h, "quarantined")
+                      for h in self.hosts}
+            exc = self.all_quarantined
+            if exc is None:
+                exc = self.all_quarantined = AllHostsQuarantinedError(
+                    causes)
+        msg = str(exc)
         while True:
             try:
                 item = self._pending.get_nowait()
@@ -431,7 +541,6 @@ class SSHWorkerPool(WorkerPool):
             if item is None:
                 continue
             n = len(item.nodes)
-            msg = f"no live hosts (all {len(self.hosts)} quarantined)"
             now = time.monotonic()
             self._events.put(CompletionEvent(
                 item.token, [None] * n, [msg] * n, now, now, host=None))
@@ -554,17 +663,32 @@ class SchedulerSubmitter(Submitter):
 
 class LocalSubmitter(Submitter):
     """Fake submitter: runs the script with ``sh`` on this machine in
-    the background — same spool protocol, no scheduler binary."""
+    the background — same spool protocol, no scheduler binary.
+
+    Chaos seam: an armed plan's ``lose_job`` event makes ``submit``
+    accept the script but never spawn it (the queue "lost" the job —
+    its ``.rc`` files never appear and the batch deadline fires);
+    ``dup_job`` spawns the script twice (a requeue raced the original
+    — completion handling must stay idempotent)."""
 
     def __init__(self) -> None:
         self._procs: dict[str, subprocess.Popen] = {}
+        self._dups: list[subprocess.Popen] = []
         self._n = 0
 
     def submit(self, script: Path) -> str:
+        ctrl = _chaos.current()
+        act = ctrl.job_action() if ctrl is not None else None
+        self._n += 1
+        if act == "lose_job":
+            return f"local{self._n}.lost"
         popen = subprocess.Popen(["sh", str(script)],
                                  stdout=subprocess.DEVNULL,
                                  stderr=subprocess.DEVNULL)
-        self._n += 1
+        if act == "dup_job":
+            self._dups.append(subprocess.Popen(
+                ["sh", str(script)], stdout=subprocess.DEVNULL,
+                stderr=subprocess.DEVNULL))
         job_id = f"local{self._n}.{popen.pid}"
         self._procs[job_id] = popen
         return job_id

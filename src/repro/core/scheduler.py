@@ -89,6 +89,126 @@ class ScheduleEvent:
     stop: float
 
 
+#: failure kinds a retry policy can match (WDL ``retry_on:``)
+RETRY_KINDS = ("nonzero", "timeout", "host", "error")
+
+
+def classify_failure(error: str | None) -> str:
+    """Map an attempt's error string onto a retry-policy failure kind:
+    ``timeout`` (deadline or budget expiry), ``nonzero`` (exit status),
+    ``host`` (infrastructure — unreachable host, dead lane, drained
+    pool), ``error`` (anything else: runner exceptions, classification
+    failures)."""
+    e = error or ""
+    if e.startswith("timeout"):
+        return "timeout"
+    if e.startswith("nonzero exit"):
+        return "nonzero"
+    if (e.startswith("host ") or e.startswith("no live hosts")
+            or "lane worker" in e or "unreachable" in e):
+        return "host"
+    return "error"
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """How failed attempts re-enter the ready queue (WDL ``retry:``).
+
+    ``max`` of None defers to the scheduler's ``max_retries``.  The
+    delay before re-dispatching after failed attempt *k* is ``base``
+    (``backoff: fixed``) or ``base * 2**(k-1)`` (``backoff:
+    exponential``), capped at ``max_delay`` and spread by ±``jitter``
+    (a fraction, derived deterministically from the node id so runs
+    stay reproducible).  Only failures whose ``classify_failure`` kind
+    is in ``retry_on`` are retried at all; the rest fail immediately
+    with their successor closure.
+
+    The default policy retries every kind with a 50 ms exponential
+    backoff — the smallest delay that still breaks the instant-retry
+    storm (a node failing deterministically in under a millisecond used
+    to burn its whole retry budget inside one loop iteration)."""
+
+    max: int | None = None
+    backoff: str = "exponential"
+    base: float = 0.05
+    jitter: float = 0.0
+    max_delay: float = 30.0
+    retry_on: frozenset = frozenset(RETRY_KINDS)
+
+    @classmethod
+    def from_any(cls, spec: Any = None) -> "RetryPolicy":
+        """Build from a WDL ``retry:`` mapping (or pass a policy
+        through; None → the default policy)."""
+        if spec is None:
+            return cls()
+        if isinstance(spec, RetryPolicy):
+            return spec
+        known = {f.name for f in dataclasses.fields(cls)}
+        bad = sorted(set(spec) - known)
+        if bad:
+            raise ValueError(f"unknown retry key(s): {', '.join(bad)}")
+        kw: dict[str, Any] = {}
+        if spec.get("max") is not None:
+            kw["max"] = int(spec["max"])
+            if kw["max"] < 0:
+                raise ValueError("retry max must be >= 0")
+        if spec.get("backoff") is not None:
+            b = str(spec["backoff"]).strip().lower()
+            if b not in ("exponential", "fixed"):
+                raise ValueError(
+                    f"retry backoff must be 'exponential' or 'fixed', "
+                    f"got {b!r}")
+            kw["backoff"] = b
+        for k in ("base", "jitter", "max_delay"):
+            if spec.get(k) is not None:
+                kw[k] = float(spec[k])
+                if kw[k] < 0:
+                    raise ValueError(f"retry {k} must be >= 0")
+        if spec.get("retry_on") is not None:
+            kinds = spec["retry_on"]
+            if isinstance(kinds, str):
+                kinds = [kinds]
+            norm = frozenset(str(k).strip().lower() for k in kinds)
+            bad_kinds = sorted(norm - set(RETRY_KINDS))
+            if bad_kinds:
+                raise ValueError(
+                    f"unknown retry_on kind(s): {', '.join(bad_kinds)} "
+                    f"(valid: {', '.join(RETRY_KINDS)})")
+            kw["retry_on"] = norm
+        return cls(**kw)
+
+    def retries(self, default: int) -> int:
+        return default if self.max is None else self.max
+
+    def should_retry(self, error: str | None) -> bool:
+        return classify_failure(error) in self.retry_on
+
+    def delay(self, attempt: int, key: str = "") -> float:
+        """Backoff before re-dispatching after failed attempt
+        ``attempt`` (1-based)."""
+        if self.backoff == "fixed":
+            d = self.base
+        else:
+            d = self.base * (2.0 ** max(0, attempt - 1))
+        d = min(d, self.max_delay)
+        if self.jitter:
+            u = random.Random(f"{key}#{attempt}").random()
+            d *= 1.0 + self.jitter * (2.0 * u - 1.0)
+        return max(0.0, d)
+
+    def ceiling(self, default_retries: int = 1) -> float:
+        """Worst-case single backoff the policy can impose — what lint
+        W701 compares against the task timeout."""
+        n = self.retries(default_retries)
+        if n < 1:
+            return 0.0
+        if self.backoff == "fixed":
+            d = self.base
+        else:
+            d = self.base * (2.0 ** max(0, n - 1))
+        return min(d, self.max_delay) * (1.0 + self.jitter)
+
+
 class VirtualClock:
     """Injectable event-time source for wall-clock-free simulation."""
 
@@ -220,6 +340,7 @@ class Scheduler:
         order: str = "breadth",
         speculate: bool = False,
         straggler_quantile: float | None = None,
+        retry_policy: Any = None,
     ) -> None:
         """``order``: "breadth" finishes each task level across all
         workflow instances first; "depth" completes one instance's whole
@@ -230,7 +351,10 @@ class Scheduler:
         ``straggler_factor ×`` the median runtime, or — when
         ``straggler_quantile`` is set (e.g. 0.9 for p90, the WDL
         ``straggler_quantile:`` keyword) — the running q-quantile of
-        completed runtimes directly, no factor applied."""
+        completed runtimes directly, no factor applied.
+        ``retry_policy``: a ``RetryPolicy`` (or WDL ``retry:``-shaped
+        mapping) governing when and after what backoff failed attempts
+        re-dispatch; a per-node ``retry`` payload entry overrides it."""
         if slots < 1:
             raise ValueError("slots must be >= 1")
         if order not in ("breadth", "depth"):
@@ -247,6 +371,8 @@ class Scheduler:
         self.clock = clock
         self.order = order
         self.speculate = speculate
+        self.retry_policy = RetryPolicy.from_any(retry_policy)
+        self._retry_cache: dict[str, RetryPolicy] = {}
         #: live-node high-water mark of the last run (streaming admission
         #: bounds it near ``slots + window``; eager runs see the full DAG)
         self.peak_live_nodes = 0
@@ -277,6 +403,32 @@ class Scheduler:
                 stderr = (getattr(value, "stderr", "") or "")[-2000:]
                 return f"nonzero exit {rc}: {stderr}"
         return None
+
+    def _node_retry_policy(self, node: TaskNode) -> RetryPolicy:
+        """The effective retry policy for a node: its WDL ``retry:``
+        payload entry if present (parsed once per task section),
+        otherwise the scheduler-wide policy."""
+        spec = self._payload(node).get("retry")
+        if not spec:
+            return self.retry_policy
+        if isinstance(spec, RetryPolicy):
+            return spec
+        pol = self._retry_cache.get(node.task)
+        if pol is None:
+            pol = self._retry_cache[node.task] = RetryPolicy.from_any(spec)
+        return pol
+
+    def _wait_until(self, t: float) -> None:
+        """Advance to time ``t`` when nothing is in flight: virtual
+        clocks jump (``.now`` duck-typing, the ``VirtualClock``
+        contract), wall clocks nap in bounded slices so the loop stays
+        responsive to completions and interrupts."""
+        clk = self.clock
+        now_attr = getattr(clk, "now", None)
+        if now_attr is not None:
+            clk.now = max(now_attr, t)
+        else:
+            time.sleep(max(0.0, min(t - clk(), 0.05)))
 
     # ------------------------------------------------------------------
     def execute(
@@ -401,6 +553,7 @@ class Scheduler:
         # replacing per-event O(running) scans
         deadline_heap: list[tuple[float, int]] = []   # (deadline, token)
         strag_heap: list[tuple[float, int]] = []      # (dispatched, token)
+        retry_heap: list[tuple[float, str]] = []      # (due, node id)
 
         def _mark_failed_closure(root: str) -> None:
             stack = [root]
@@ -586,9 +739,21 @@ class Scheduler:
                         heapq.heappush(strag_heap, (pd.dispatched, t))
                 return
             fs = first_started.setdefault(nid, started)
-            if error is not None and attempts.get(nid, 0) <= self.max_retries:
-                bisect.insort(ready, nid, key=self._order_key)  # retry
-                return
+            if error is not None:
+                policy = self._node_retry_policy(node)
+                n_attempt = attempts.get(nid, 0)
+                if (n_attempt <= policy.retries(self.max_retries)
+                        and policy.should_retry(error)):
+                    # backoff instead of instant re-insort: a
+                    # deterministic sub-millisecond failure must not
+                    # burn its whole retry budget in one loop iteration
+                    delay = policy.delay(n_attempt, key=nid)
+                    if delay > 0.0:
+                        heapq.heappush(retry_heap,
+                                       (self.clock() + delay, nid))
+                    else:
+                        bisect.insort(ready, nid, key=self._order_key)
+                    return
             for t in list(live_tokens.get(nid, ())):
                 _abandon(t)         # first finisher wins; drop other copies
             if error is not None:
@@ -630,6 +795,13 @@ class Scheduler:
             if win_ctrl is not None:
                 win_ctrl.observe(self.clock(), n_resolved)
             _admit()
+            if retry_heap:
+                # re-queue nodes whose backoff has elapsed
+                now = self.clock()
+                while retry_heap and retry_heap[0][0] <= now:
+                    _, rnid = heapq.heappop(retry_heap)
+                    if rnid not in resolved_ids:
+                        bisect.insort(ready, rnid, key=self._order_key)
             if exhausted and not pending and n_resolved >= expected:
                 break
             # resolve failure-closure nodes without occupying slots.
@@ -681,6 +853,11 @@ class Scheduler:
             if not running and not abandoned:
                 if ready:
                     continue
+                if retry_heap:
+                    # every live node is backing off: advance to the
+                    # earliest retry instead of declaring deadlock
+                    self._wait_until(retry_heap[0][0])
+                    continue
                 if _admit(force=True):
                     continue        # window was full of doomed/blocked work
                 # nothing running, ready, or admittable → remaining deps
@@ -709,6 +886,8 @@ class Scheduler:
                 heapq.heappop(deadline_heap)    # stale: dispatch finished
             if deadline_heap:
                 horizons.append(deadline_heap[0][0])
+            if retry_heap:
+                horizons.append(retry_heap[0][0])
             if limit is not None:
                 # earliest still-eligible straggler candidate bounds the
                 # next speculation horizon

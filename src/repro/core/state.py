@@ -62,7 +62,7 @@ from contextlib import contextmanager
 from pathlib import Path
 from typing import Any, Iterable, Iterator, Mapping
 
-from .groupcommit import ShardedGroupCommit
+from .groupcommit import ShardedGroupCommit, iter_jsonl
 from .locklint import make_lock
 
 
@@ -266,18 +266,26 @@ class StudyJournal:
             self._writer.append(
                 json.dumps(entry, separators=(",", ":")) + "\n")
 
+    def set_pre_flush(self, fn: Any) -> None:
+        """Durability-ordering hook: ``fn`` runs before any journal
+        batch physically writes.  The study engine points it at the
+        provenance DB's flush so a completion can never be durable in
+        the journal before its record is durable in the DB — a crash
+        may lose a completion (resume re-runs it) but never strand a
+        journal entry whose record is gone."""
+        with self._lock:
+            self._writer.set_pre_flush(fn)
+
     # -- readers ----------------------------------------------------------
     def _log_entries(self) -> Iterator[dict[str, Any]]:
         # every on-disk segment first (union over shards — including
         # segments a previous run wrote with a different shard count),
         # then the unflushed in-memory tail — a reader holding the lock
-        # sees every recorded completion
+        # sees every recorded completion.  Segments read through the
+        # corruption-tolerant iterator: a torn tail (crash mid-write)
+        # warns and drops that entry instead of refusing resume.
         for seg in self._writer.segment_paths():
-            with seg.open() as f:
-                for line in f:
-                    line = line.strip()
-                    if line:
-                        yield json.loads(line)
+            yield from iter_jsonl(seg, "journal")
         for line in self._writer.pending():
             yield json.loads(line)
 

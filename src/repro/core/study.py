@@ -34,6 +34,7 @@ import time
 from pathlib import Path
 from typing import Any, Callable, Iterator, Mapping, Sequence
 
+from . import chaos as chaos_mod
 from .interpolate import compile_environ, compile_template
 from .dag import TaskDAG, TaskNode
 from .executors import (
@@ -210,6 +211,8 @@ class ParameterStudy:
             payload: dict[str, Any] = {"global_combo": dict(combo),
                                        "timeout": task.timeout,
                                        "allow_nonzero": task.allow_nonzero}
+            if task.retry:
+                payload["retry"] = task.retry
             if index is not None:
                 payload["index"] = index
             nodes.append(TaskNode(
@@ -357,6 +360,46 @@ class ParameterStudy:
                 spool_root=self.db.dir / "batch"), True
         return make_pool(pool, slots), True
 
+    # -- chaos / degraded-run health ------------------------------------
+    @staticmethod
+    def _resolve_chaos(chaos: Any) -> Any:
+        """Normalize ``run(chaos=…)`` to a live ``ChaosController``:
+        accepts a controller, a ``FaultPlan``, a plan mapping, or a
+        path to a plan YAML.  ``None`` falls through to whatever is
+        already armed process-wide (``PAPAS_CHAOS`` / ``install``)."""
+        if chaos is None:
+            return chaos_mod.current()
+        if isinstance(chaos, chaos_mod.ChaosController):
+            return chaos
+        if isinstance(chaos, chaos_mod.FaultPlan):
+            return chaos.controller()
+        if isinstance(chaos, Mapping):
+            return chaos_mod.FaultPlan.from_dict(chaos).controller()
+        return chaos_mod.FaultPlan.load(chaos).controller()
+
+    def _finalize_run_health(self, worker: Any, ctrl: Any
+                             ) -> dict[str, Any]:
+        """Post-run health verdict (graceful degradation): a run that
+        survived faults — permanently lost hosts, injected chaos —
+        completes *degraded* instead of dying, and ``study.json``
+        records what was lost (per-host causes, the fault ledger) so
+        reports can flag the result set (§4.3 fault tolerance)."""
+        health: dict[str, Any] = {}
+        lost = sorted(getattr(worker, "dead_hosts", None) or ())
+        if lost:
+            causes = getattr(worker, "host_causes", None) or {}
+            health["lost_hosts"] = lost
+            health["host_causes"] = {h: causes.get(h, "unknown")
+                                     for h in lost}
+        if ctrl is not None and len(ctrl.ledger):
+            health["fault_ledger"] = ctrl.ledger.as_list()
+        if health:
+            health["degraded"] = True
+            meta = self.db.read_meta()
+            meta.update(health)
+            self.db.write_meta(meta)
+        return health
+
     # -- results capture ------------------------------------------------
     def _capture_state(self, aggregator: Any) -> tuple[
             Callable[[TaskNode, Any], str | None] | None,
@@ -475,6 +518,8 @@ class ParameterStudy:
         keep_results: bool = True,
         aggregator: Any = None,
         straggler_quantile: float | None = None,
+        retry: Any = None,
+        chaos: Any = None,
     ) -> dict[str, TaskResult]:
         """Execute the study through the unified event engine.
 
@@ -530,6 +575,17 @@ class ParameterStudy:
         ``(combo, metrics)`` — with ``keep_results=False`` a streaming
         run aggregates in O(groups) memory with no result accumulation
         anywhere.
+
+        ``retry`` sets the run's default retry policy (a
+        ``scheduler.RetryPolicy`` or a WDL ``retry:``-shaped mapping:
+        ``max``/``backoff``/``base``/``jitter``/``retry_on``) — failed
+        attempts re-queue after a backoff delay instead of instantly,
+        and per-task WDL ``retry:`` blocks override it.  ``chaos``
+        arms deterministic fault injection for the run (a
+        ``chaos.FaultPlan``, a plan mapping, a plan-YAML path, or a
+        live ``ChaosController``); the run then completes *degraded*
+        rather than dying when hosts are permanently lost, with the
+        fault ledger and per-host causes attached to ``study.json``.
         """
         if isinstance(window, str) and window != "auto":
             raise ValueError(
@@ -545,7 +601,9 @@ class ParameterStudy:
                 nnodes=nnodes, transport=transport, submitter=submitter,
                 on_result=on_result, keep_results=keep_results,
                 aggregator=aggregator,
-                straggler_quantile=straggler_quantile)
+                straggler_quantile=straggler_quantile,
+                retry=retry, chaos=chaos)
+        ctrl = self._resolve_chaos(chaos)
         instances = self.instances()
         completed: set[str] = set()
         if resume and self.journal.exists():
@@ -577,45 +635,66 @@ class ParameterStudy:
         self.journal.save(instances, completed, {"name": self.name},
                           hosts=host_map)
 
-        worker, owned = self._make_worker(pool, gang, slots, hosts, ppnode,
-                                          nnodes, transport, submitter)
-        # lane-style pools report transient local labels as hosts: they
-        # stay in the per-attempt records, never the journal host map
-        # (which must stay O(remote tasks), not O(N_W))
-        keep_hosts = getattr(worker, "durable_hosts", True)
-        capture_classify, capture_finish = self._capture_state(aggregator)
-
-        def _on_result(res: TaskResult) -> None:
-            node = dag.nodes[res.id]
-            metrics = capture_finish(node, res) if capture_finish else None
-            self.db.record(res.id, res.status, res.runtime, combo=node.combo,
-                           error=res.error, attempts=res.attempts,
-                           slot=res.slot, host=res.host, metrics=metrics)
-            if res.status == "ok":
-                completed.add(res.id)
-                host = res.host if keep_hosts else None
-                if host:
-                    host_map[res.id] = host
-                self.journal.mark_complete(res.id, host=host)
-            if on_result is not None:
-                on_result(res)
-
-        # remote pools derive their capacity from hosts/nnodes × ppnode;
-        # the scheduler must drive every dispatch lane the pool offers
-        # (for batch pools that is the allocation count, not the group
-        # size — one dispatch already hosts a whole group)
-        slots = max(slots, getattr(worker, "dispatch_slots", slots) or slots)
-        sched = Scheduler(slots=slots, max_retries=max_retries,
-                          speculate=speculate,
-                          straggler_quantile=straggler_quantile)
-        # high-rate parallel backends shard the completion streams so
-        # group commits never serialize on one buffered handle; the
-        # compaction below folds every segment back into the base
-        shards = self._auto_shards(worker)
-        self.journal.set_shards(shards)
-        self.db.set_shards(shards)
-        self._run_base_env = dict(os.environ)   # one snapshot per run
+        # arm chaos for the backend's whole lifetime — lane pools
+        # capture the controller at construction, transports consult it
+        # per dispatch — restoring whatever was armed before
+        _prev_chaos = chaos_mod.current()
+        chaos_mod.install(ctrl)
+        worker: WorkerPool | None = None
+        owned = False
         try:
+            worker, owned = self._make_worker(pool, gang, slots, hosts,
+                                              ppnode, nnodes, transport,
+                                              submitter)
+            # lane-style pools report transient local labels as hosts:
+            # they stay in the per-attempt records, never the journal
+            # host map (which must stay O(remote tasks), not O(N_W))
+            keep_hosts = getattr(worker, "durable_hosts", True)
+            capture_classify, capture_finish = \
+                self._capture_state(aggregator)
+
+            def _on_result(res: TaskResult) -> None:
+                node = dag.nodes[res.id]
+                metrics = (capture_finish(node, res) if capture_finish
+                           else None)
+                self.db.record(res.id, res.status, res.runtime,
+                               combo=node.combo, error=res.error,
+                               attempts=res.attempts, slot=res.slot,
+                               host=res.host, metrics=metrics)
+                if res.status == "ok":
+                    completed.add(res.id)
+                    host = res.host if keep_hosts else None
+                    if host:
+                        host_map[res.id] = host
+                    self.journal.mark_complete(res.id, host=host)
+                if ctrl is not None:
+                    ctrl.on_record()      # sigkill seam: crash-by-plan
+                if on_result is not None:
+                    on_result(res)
+
+            # remote pools derive their capacity from hosts/nnodes ×
+            # ppnode; the scheduler must drive every dispatch lane the
+            # pool offers (for batch pools that is the allocation
+            # count, not the group size — one dispatch already hosts a
+            # whole group)
+            slots = max(slots,
+                        getattr(worker, "dispatch_slots", slots) or slots)
+            sched = Scheduler(slots=slots, max_retries=max_retries,
+                              speculate=speculate,
+                              straggler_quantile=straggler_quantile,
+                              retry_policy=retry)
+            # high-rate parallel backends shard the completion streams
+            # so group commits never serialize on one buffered handle;
+            # the compaction below folds every segment back to the base
+            shards = self._auto_shards(worker)
+            self.journal.set_shards(shards)
+            self.db.set_shards(shards)
+            # durability order: a journal entry must never become
+            # durable before the provenance record it refers to — a
+            # crash may lose a completion (resume re-runs it) but never
+            # strand a journaled completion without its record
+            self.journal.set_pre_flush(self.db.flush)
+            self._run_base_env = dict(os.environ)  # one snapshot per run
             with self.journal.group_commit(self.flush_count,
                                            self.flush_interval), \
                     self.db.group_commit(self.flush_count,
@@ -625,7 +704,9 @@ class ParameterStudy:
                                         keep_results=keep_results,
                                         classify=capture_classify)
         finally:
-            if owned:
+            chaos_mod.install(_prev_chaos)
+            self.journal.set_pre_flush(None)
+            if owned and worker is not None:
                 worker.shutdown()
         # compact the journal: fold the append log back into the base
         self.journal.save(instances, completed, {"name": self.name},
@@ -636,6 +717,7 @@ class ParameterStudy:
             "peak_live_nodes": sched.peak_live_nodes,
             "n_instances": len(instances),
         }
+        self.last_run_stats.update(self._finalize_run_health(worker, ctrl))
         return results
 
     def _run_windowed(
@@ -657,8 +739,11 @@ class ParameterStudy:
         keep_results: bool = True,
         aggregator: Any = None,
         straggler_quantile: float | None = None,
+        retry: Any = None,
+        chaos: Any = None,
     ) -> dict[str, TaskResult]:
         """Streaming execution: windowed admission + journal v2."""
+        ctrl = self._resolve_chaos(chaos)
         space = self.space()
         shash = space.space_hash()
         n_instances = space.sample_count()
@@ -703,48 +788,65 @@ class ParameterStudy:
         dag = TaskDAG()
         run_fn = runner or self._default_runner
 
-        worker, owned = self._make_worker(pool, gang, slots, hosts, ppnode,
-                                          nnodes, transport, submitter)
-        # see the eager path: transient lane labels never enter the
-        # journal host map — streaming journals stay O(completed ranges)
-        keep_hosts = getattr(worker, "durable_hosts", True)
-        capture_classify, capture_finish = self._capture_state(aggregator)
-
-        def _on_result(res: TaskResult) -> None:
-            # fires before the scheduler retires the node, so the lookup
-            # below sees the live TaskNode
-            node = dag.nodes[res.id]
-            idx = node.payload.get("index")
-            metrics = capture_finish(node, res) if capture_finish else None
-            self.db.record(res.id, res.status, res.runtime, combo=node.combo,
-                           error=res.error, attempts=res.attempts,
-                           slot=res.slot, host=res.host, index=idx,
-                           metrics=metrics)
-            if res.status == "ok":
-                host = res.host if keep_hosts else None
-                if host:
-                    host_map[res.id] = host
-                if idx is not None:
-                    completed_idx.setdefault(node.task, set()).add(idx)
-                self.journal.mark_complete(res.id, host=host, index=idx,
-                                           task=node.task)
-            if on_result is not None:
-                on_result(res)
-
-        slots = max(slots, getattr(worker, "dispatch_slots", slots) or slots)
-        # "auto": size the admission window from the observed completion
-        # rate (~half a second of throughput), floored at the slot count
-        win: int | AdaptiveWindow = (AdaptiveWindow(slots=slots)
-                                     if window == "auto" else window)
-        sched = Scheduler(slots=slots, max_retries=max_retries,
-                          speculate=speculate,
-                          straggler_quantile=straggler_quantile)
-        # see the eager path: shard the completion streams for the run
-        shards = self._auto_shards(worker)
-        self.journal.set_shards(shards)
-        self.db.set_shards(shards)
-        self._run_base_env = dict(os.environ)   # one snapshot per run
+        # see the eager path: arm chaos for the backend's lifetime
+        _prev_chaos = chaos_mod.current()
+        chaos_mod.install(ctrl)
+        worker: WorkerPool | None = None
+        owned = False
         try:
+            worker, owned = self._make_worker(pool, gang, slots, hosts,
+                                              ppnode, nnodes, transport,
+                                              submitter)
+            # see the eager path: transient lane labels never enter the
+            # journal host map — streaming journals stay O(completed
+            # ranges)
+            keep_hosts = getattr(worker, "durable_hosts", True)
+            capture_classify, capture_finish = \
+                self._capture_state(aggregator)
+
+            def _on_result(res: TaskResult) -> None:
+                # fires before the scheduler retires the node, so the
+                # lookup below sees the live TaskNode
+                node = dag.nodes[res.id]
+                idx = node.payload.get("index")
+                metrics = (capture_finish(node, res) if capture_finish
+                           else None)
+                self.db.record(res.id, res.status, res.runtime,
+                               combo=node.combo, error=res.error,
+                               attempts=res.attempts, slot=res.slot,
+                               host=res.host, index=idx, metrics=metrics)
+                if res.status == "ok":
+                    host = res.host if keep_hosts else None
+                    if host:
+                        host_map[res.id] = host
+                    if idx is not None:
+                        completed_idx.setdefault(node.task,
+                                                 set()).add(idx)
+                    self.journal.mark_complete(res.id, host=host,
+                                               index=idx, task=node.task)
+                if ctrl is not None:
+                    ctrl.on_record()      # sigkill seam: crash-by-plan
+                if on_result is not None:
+                    on_result(res)
+
+            slots = max(slots,
+                        getattr(worker, "dispatch_slots", slots) or slots)
+            # "auto": size the admission window from the observed
+            # completion rate (~half a second of throughput), floored
+            # at the slot count
+            win: int | AdaptiveWindow = (AdaptiveWindow(slots=slots)
+                                         if window == "auto" else window)
+            sched = Scheduler(slots=slots, max_retries=max_retries,
+                              speculate=speculate,
+                              straggler_quantile=straggler_quantile,
+                              retry_policy=retry)
+            # see the eager path: shard the completion streams; couple
+            # journal durability to the DB's (records first, always)
+            shards = self._auto_shards(worker)
+            self.journal.set_shards(shards)
+            self.db.set_shards(shards)
+            self.journal.set_pre_flush(self.db.flush)
+            self._run_base_env = dict(os.environ)  # one snapshot per run
             with self.journal.group_commit(self.flush_count,
                                            self.flush_interval), \
                     self.db.group_commit(self.flush_count,
@@ -755,7 +857,9 @@ class ParameterStudy:
                                         keep_results=keep_results,
                                         classify=capture_classify)
         finally:
-            if owned:
+            chaos_mod.install(_prev_chaos)
+            self.journal.set_pre_flush(None)
+            if owned and worker is not None:
                 worker.shutdown()
         # compact: fold the append log back into a fresh v2 base
         self.journal.save_indexed(shash, n_instances, completed_idx,
@@ -771,6 +875,7 @@ class ParameterStudy:
             "window": win.current if isinstance(win, AdaptiveWindow)
             else window,
         }
+        self.last_run_stats.update(self._finalize_run_health(worker, ctrl))
         return results
 
 

@@ -25,11 +25,18 @@ output: a regex string, or a mapping with exactly one of
 ``regex:``/``json:``/``csv:``/``builtin:`` plus optional ``source:``
 (stdout | stderr | outfile:<name> | file:<path template>),
 ``required:``, ``type:``, and ``group:``; builtins are ``rc``,
-``duration``, ``host``, ``slot`` — see ``repro.core.results``), and
+``duration``, ``host``, ``slot`` — see ``repro.core.results``),
 ``baseline`` (the reference parameter point for derived
-speedup/efficiency metrics, e.g. ``baseline: {threads: 1}``).  Anything
-else is a user-defined keyword usable in interpolations (e.g. ``args``
-in the paper's Fig. 5).
+speedup/efficiency metrics, e.g. ``baseline: {threads: 1}``), and
+``retry`` (per-task retry policy threaded to the scheduler: ``max:``
+attempts beyond the first, ``backoff: exponential | fixed``, ``base:``
+seconds before the first re-dispatch, ``jitter:`` a ±fraction spread,
+``max_delay:`` a cap on any single backoff (default 30 s),
+``retry_on:`` the failure kinds worth retrying — any of ``nonzero``,
+``timeout``, ``host``, ``error`` — e.g. ``retry: {max: 3, backoff:
+exponential, base: 0.5, retry_on: [timeout, host]}``; see
+``repro.core.scheduler.RetryPolicy``).  Anything else is a user-defined
+keyword usable in interpolations (e.g. ``args`` in the paper's Fig. 5).
 
 One top-level section name is reserved for the framework: ``lint:`` is
 not a task but the study-local static-analysis policy consumed by
@@ -77,6 +84,7 @@ RESERVED_KEYWORDS = frozenset(
         "capture",
         "baseline",
         "straggler_quantile",
+        "retry",
     }
 )
 
@@ -262,6 +270,9 @@ class TaskSpec:
     capture: dict[str, Any] = dataclasses.field(default_factory=dict)
     #: reference parameter point for speedup/efficiency derivation
     baseline: dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: retry policy for the scheduler (``max``, ``backoff``, ``base``,
+    #: ``jitter``, ``retry_on``) — empty means the engine default
+    retry: dict[str, Any] = dataclasses.field(default_factory=dict)
     #: user-defined keywords → {subkey: [values]} or {None: [values]}
     user: dict[str, dict[str | None, list[Any]]] = dataclasses.field(
         default_factory=dict
@@ -439,6 +450,8 @@ def _parse_keyword(spec: TaskSpec, name: str, kw: str, val: Any) -> None:
                     f"task {name!r}: baseline value for {k!r} must be "
                     f"a scalar, got {v!r}")
             spec.baseline[str(k)] = iv
+    elif kw == "retry":
+        spec.retry = _parse_retry_block(name, val)
     elif kw == "sampling":
         if isinstance(val, str):
             spec.sampling = {"method": val}
@@ -452,6 +465,72 @@ def _parse_keyword(spec: TaskSpec, name: str, kw: str, val: Any) -> None:
             spec.user[kw] = {str(k): _expand_values(v) for k, v in val.items()}
         else:
             spec.user[kw] = {None: _expand_values(val)}
+
+
+#: recognized keys of a task's ``retry:`` block.
+_RETRY_KEYS = frozenset(
+    {"max", "backoff", "base", "jitter", "max_delay", "retry_on"})
+#: failure kinds ``retry_on:`` may list (scheduler.classify_failure).
+_RETRY_ON = ("nonzero", "timeout", "host", "error")
+
+
+def _parse_retry_block(name: str, val: Any) -> dict[str, Any]:
+    """Validate a task's ``retry:`` block into the plain mapping the
+    scheduler's ``RetryPolicy.from_any`` consumes."""
+    if not isinstance(val, Mapping):
+        raise WDLError(
+            f"task {name!r}: retry must be a mapping "
+            f"(keys: {', '.join(sorted(_RETRY_KEYS))})")
+    out: dict[str, Any] = {}
+    for k_raw, v in val.items():
+        k = str(k_raw)
+        if k not in _RETRY_KEYS:
+            raise WDLError(
+                f"task {name!r}: unknown retry key {k!r} "
+                f"(valid: {', '.join(sorted(_RETRY_KEYS))})",
+                keyword=f"retry.{k}")
+        if k == "max":
+            try:
+                out["max"] = int(v)
+            except (TypeError, ValueError) as e:
+                raise WDLError(
+                    f"task {name!r}: retry max must be an integer",
+                    keyword="retry.max") from e
+            if out["max"] < 0:
+                raise WDLError(
+                    f"task {name!r}: retry max must be >= 0",
+                    keyword="retry.max")
+        elif k == "backoff":
+            b = str(v).strip().lower()
+            if b not in ("exponential", "fixed"):
+                raise WDLError(
+                    f"task {name!r}: retry backoff must be "
+                    f"'exponential' or 'fixed', got {v!r}",
+                    keyword="retry.backoff")
+            out["backoff"] = b
+        elif k in ("base", "jitter", "max_delay"):
+            try:
+                out[k] = float(v)
+            except (TypeError, ValueError) as e:
+                raise WDLError(
+                    f"task {name!r}: retry {k} must be a number",
+                    keyword=f"retry.{k}") from e
+            if out[k] < 0 or (k == "jitter" and out[k] > 1):
+                raise WDLError(
+                    f"task {name!r}: retry {k} must be "
+                    f"{'in [0, 1]' if k == 'jitter' else '>= 0'}, "
+                    f"got {v!r}", keyword=f"retry.{k}")
+        else:   # retry_on
+            kinds = v if isinstance(v, list) else [v]
+            norm = [str(x).strip().lower() for x in kinds]
+            bad = sorted(set(norm) - set(_RETRY_ON))
+            if bad:
+                raise WDLError(
+                    f"task {name!r}: unknown retry_on kind(s) "
+                    f"{', '.join(bad)} (valid: {', '.join(_RETRY_ON)})",
+                    keyword="retry.retry_on")
+            out["retry_on"] = norm
+    return out
 
 
 #: recognized keys of the top-level ``lint:`` block.
@@ -653,10 +732,10 @@ def merge(*specs: StudySpec) -> StudySpec:
 
     Two specs declaring the *same* task field-merge (dicts union, lists
     concatenate, scalars overwrite).  Contradictory singletons raise:
-    two different ``baseline:`` blocks for one task (matching the
-    treatment of conflicting ``sampling`` blocks at space-construction
-    time), and two different scalar values for one ``lint:`` policy key
-    (``suppress`` lists union)."""
+    two different ``baseline:`` or ``retry:`` blocks for one task
+    (matching the treatment of conflicting ``sampling`` blocks at
+    space-construction time), and two different scalar values for one
+    ``lint:`` policy key (``suppress`` lists union)."""
     tasks: dict[str, TaskSpec] = {}
     lint: dict[str, Any] = {}
     for spec in specs:
@@ -680,6 +759,12 @@ def merge(*specs: StudySpec) -> StudySpec:
                         f"merged specs: {base.baseline!r} vs "
                         f"{t.baseline!r} — a study has one reference "
                         f"point", task=tname, keyword="baseline")
+                if base.retry and t.retry and base.retry != t.retry:
+                    raise WDLError(
+                        f"task {tname!r}: conflicting retry blocks in "
+                        f"merged specs: {base.retry!r} vs {t.retry!r} "
+                        f"— a task has one retry policy",
+                        task=tname, keyword="retry")
                 for f in dataclasses.fields(TaskSpec):
                     val = getattr(t, f.name)
                     if f.name == "task":

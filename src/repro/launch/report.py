@@ -40,6 +40,7 @@ import sys
 from pathlib import Path
 from typing import Any, Iterable, Iterator, Mapping, Sequence
 
+from repro.core.groupcommit import iter_jsonl
 from repro.core.results import (
     STATS, KeyResolutionError, ResultsAggregator, infer_scalar,
 )
@@ -79,11 +80,9 @@ def iter_records(path: "str | Path") -> Iterator[dict[str, Any]]:
                   key=lambda p: int(p.name.rsplit(".s", 1)[1]))
 
     def _stream(p: Path) -> Iterator[dict[str, Any]]:
-        with p.open() as f:
-            for line in f:
-                line = line.strip()
-                if line:
-                    yield json.loads(line)
+        # corruption-tolerant (shared with the live loaders): a torn
+        # tail warns and drops that record, not the whole report
+        yield from iter_jsonl(p, "records")
     if not segs:
         yield from _stream(base)
         return
@@ -101,6 +100,38 @@ def aggregate_records(
     agg = ResultsAggregator(group_by, metrics=metrics)
     agg.add_records(iter_records(path))
     return agg
+
+
+def degraded_banner(path: "str | Path") -> str | None:
+    """A warning banner when the study's ``study.json`` marks the run
+    degraded (it finished on surviving hosts after losing some): names
+    the lost hosts with their failure causes and summarizes the
+    attached fault ledger, so a report over partial infrastructure
+    never masquerades as a clean one."""
+    p = Path(path)
+    meta_path = (p if p.is_dir() else p.parent) / "study.json"
+    if not meta_path.exists():
+        return None
+    try:
+        meta = json.loads(meta_path.read_text())
+    except ValueError:
+        return None
+    if not meta.get("degraded"):
+        return None
+    lines = ["DEGRADED RUN: the study lost hosts mid-run and finished "
+             "on the survivors"]
+    causes = meta.get("host_causes") or {}
+    for host in meta.get("lost_hosts") or sorted(causes):
+        cause = causes.get(host, "")
+        lines.append(f"  lost host {host}" + (f": {cause}" if cause
+                                              else ""))
+    faults = meta.get("fault_ledger") or []
+    if faults:
+        lines.append(f"  fault ledger: {len(faults)} injected fault(s) "
+                     + ", ".join(f"{f.get('fault')}@{f.get('target')}"
+                                 for f in faults[:8])
+                     + ("…" if len(faults) > 8 else ""))
+    return "\n".join(lines)
 
 
 def parse_baseline(text: str) -> dict[str, Any]:
@@ -281,6 +312,9 @@ def main(argv: Sequence[str] | None = None) -> int:
               + (f"; {detail}" if detail else "") + ")",
               file=sys.stderr)
         return 2
+    banner = degraded_banner(args.path)
+    if banner:
+        print(banner, file=sys.stderr)
     print(out)
     return 0
 

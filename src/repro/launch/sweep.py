@@ -139,6 +139,12 @@ def main() -> None:
                     help="statistic for table/speedup cells")
     ap.add_argument("--format", choices=report_mod.FORMATS, default="md",
                     dest="report_format", help="report output format")
+    ap.add_argument("--chaos", default=None, metavar="PLAN",
+                    help="arm deterministic fault injection from a "
+                         "fault-plan YAML (repro.core.chaos): faults "
+                         "fire by plan, the run degrades gracefully "
+                         "instead of dying, and study.json carries the "
+                         "fault ledger")
     ap.add_argument("--check", action="store_true",
                     help="pre-flight static analysis (repro.core.lint) "
                          "before admitting the run: print findings and "
@@ -204,6 +210,8 @@ def main() -> None:
 
     if args.straggler_quantile is not None:
         extra_kwargs["straggler_quantile"] = args.straggler_quantile
+    if args.chaos is not None:
+        extra_kwargs["chaos"] = args.chaos
 
     if args.gang:
         def gang_runner(nodes):
@@ -244,6 +252,9 @@ def main() -> None:
         total = len(results)
     print(f"{ok}/{total} instances complete; "
           f"provenance in {study.db.dir}")
+    banner = report_mod.degraded_banner(study.db.dir)
+    if banner:
+        print(banner, file=sys.stderr)
     stats = getattr(study, "last_run_stats", None)
     if args.window is not None and stats:
         print(f"[window] admitted {stats['admitted_instances']}"

@@ -1,0 +1,638 @@
+"""Chaos harness + retry-policy layer: deterministic fault injection
+over the backend seams (repro.core.chaos), scheduler retry backoff and
+failure-kind filtering, SSH host quarantine probation, corrupt-segment
+resume tolerance, durability ordering (journal pre_flush -> DB flush),
+the WDL ``retry:`` block, and the W701 lint rule."""
+import subprocess
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.core import (
+    LocalSubmitter, LocalTransport, ParameterStudy, RetryPolicy, Scheduler,
+    ShellResult, SSHWorkerPool, StudyDB, StudyJournal, TaskDAG, TaskNode,
+    VirtualClock, VirtualPool, classify_failure, parse_yaml,
+    record_fingerprint, truncate_tail,
+)
+from repro.core import chaos
+from repro.core.chaos import ChaosController, FaultEvent, FaultPlan
+from repro.core.groupcommit import iter_jsonl
+from repro.core.remote import AllHostsQuarantinedError, TransportError
+
+
+def make_dag(names, command=None):
+    dag = TaskDAG()
+    for name in names:
+        dag.add(TaskNode(id=name, task=name, combo={},
+                         payload={"command": command or f"run {name}"}))
+    return dag
+
+
+def render(node):
+    return node.payload["command"], {}
+
+
+def run(dag, pool, **kw):
+    sched = Scheduler(slots=pool.slots, **kw)
+    try:
+        return sched.execute(dag, runner=None, pool=pool)
+    finally:
+        pool.shutdown()
+
+
+SHELL_WDL = """
+t:
+  args:
+    x: ["1:6"]
+  command: echo ${args:x}
+"""
+
+
+# ---------------------------------------------------------------------------
+# fault plans
+# ---------------------------------------------------------------------------
+
+class TestFaultPlan:
+    def test_from_dict_mapping_and_list(self):
+        doc = {"name": "p", "seed": 3,
+               "events": [{"kind": "kill_lane", "lane": 1, "after": 2}]}
+        plan = FaultPlan.from_dict(doc)
+        assert plan.name == "p" and plan.seed == 3
+        assert plan.events[0].kind == "kill_lane"
+        assert plan.events[0].lane == 1 and plan.events[0].after == 2
+        # a bare list is shorthand for {"events": [...]}
+        plan2 = FaultPlan.from_dict([{"kind": "sigkill", "after": 5}])
+        assert plan2.events[0].kind == "sigkill"
+
+    def test_unknown_kind_and_keys_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultEvent("explode")
+        with pytest.raises(ValueError, match="unknown key"):
+            FaultPlan.from_dict({"events": [{"kind": "sigkill",
+                                             "whoops": 1}]})
+        with pytest.raises(ValueError, match="after must be"):
+            FaultEvent("sigkill", after=-1)
+        with pytest.raises(ValueError, match="times >= 1"):
+            FaultEvent("sigkill", times=0)
+
+    def test_load_yaml(self, tmp_path):
+        p = tmp_path / "plan.yaml"
+        p.write_text("seed: 9\nevents:\n  - kind: fail_host\n    host: h\n")
+        plan = FaultPlan.load(p)
+        assert plan.seed == 9 and plan.name == "plan"
+        assert plan.events[0].host == "h"
+
+    def test_generate_is_reproducible(self):
+        a = FaultPlan.generate(42, lanes=3, hosts=["x", "y"])
+        b = FaultPlan.generate(42, lanes=3, hosts=["x", "y"])
+        assert a.to_dict() == b.to_dict()
+        assert a.events, "generated plan must contain events"
+
+    def test_to_dict_roundtrip(self):
+        plan = FaultPlan([FaultEvent("hang_host", host="h", delay=0.5)],
+                         seed=1, name="n")
+        again = FaultPlan.from_dict(plan.to_dict())
+        assert again.to_dict() == plan.to_dict()
+
+    def test_shipped_plans_parse(self):
+        chaos_dir = Path(__file__).parent.parent / "examples" / "chaos"
+        plans = sorted(chaos_dir.glob("*.yaml"))
+        assert len(plans) >= 3, "CI chaos gate needs >= 3 canned plans"
+        for p in plans:
+            plan = FaultPlan.load(p)
+            assert plan.events, f"{p.name}: empty plan"
+
+
+# ---------------------------------------------------------------------------
+# arming / zero overhead when disabled
+# ---------------------------------------------------------------------------
+
+class TestArming:
+    def test_disabled_by_default(self):
+        assert chaos.current() is None
+
+    def test_activated_restores_previous(self):
+        c1 = FaultPlan([]).controller()
+        c2 = FaultPlan([]).controller()
+        with chaos.activated(c1):
+            assert chaos.current() is c1
+            with chaos.activated(c2):
+                assert chaos.current() is c2
+            assert chaos.current() is c1
+        assert chaos.current() is None
+
+    def test_env_arming_checked_lazily(self, tmp_path, monkeypatch):
+        plan = tmp_path / "p.yaml"
+        plan.write_text("events:\n  - kind: sigkill\n    after: 99\n")
+        monkeypatch.setenv("PAPAS_CHAOS", str(plan))
+        monkeypatch.setattr(chaos, "_controller", None)
+        monkeypatch.setattr(chaos, "_env_checked", False)
+        ctrl = chaos.current()
+        assert ctrl is not None and ctrl.plan.name == "p"
+        # the env is checked exactly once
+        assert chaos.current() is ctrl
+
+    def test_pools_capture_none_when_disarmed(self):
+        from repro.core import make_pool
+        pool = make_pool("lane", 1, render=render)
+        try:
+            assert pool._chaos is None
+        finally:
+            pool.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# controller seam semantics (pure, no engine)
+# ---------------------------------------------------------------------------
+
+class TestControllerSeams:
+    def test_lane_frame_trigger_and_budget(self):
+        ctrl = FaultPlan([FaultEvent("kill_lane", lane=0, after=2,
+                                     times=2)]).controller()
+        # frames 1, 2 pass; 3 and 4 fire; 5 exhausted
+        hits = [ctrl.lane_frame(0) for _ in range(5)]
+        assert hits == [False, False, True, True, False]
+        # a different lane never matches an addressed event
+        assert not any(ctrl.lane_frame(1) for _ in range(5))
+        led = ctrl.ledger.as_list()
+        assert len(led) == 2 and all(e["fault"] == "kill_lane"
+                                     for e in led)
+
+    def test_unaddressed_event_matches_any_target(self):
+        ctrl = FaultPlan([FaultEvent("fail_host")]).controller()
+        assert ctrl.host_action("anything") == ("fail_host", 0.25)
+        assert ctrl.host_action("anything") is None     # budget spent
+
+    def test_host_action_kinds(self):
+        ctrl = FaultPlan([
+            FaultEvent("hang_host", host="h", delay=0.01),
+            FaultEvent("fail_host", host="h"),
+        ]).controller()
+        assert ctrl.host_action("h") == ("hang_host", 0.01)
+        assert ctrl.host_action("h") == ("fail_host", 0.25)
+        assert ctrl.host_action("h") is None
+
+    def test_job_action(self):
+        ctrl = FaultPlan([FaultEvent("lose_job"),
+                          FaultEvent("dup_job", after=1)]).controller()
+        assert ctrl.job_action() == "lose_job"
+        assert ctrl.job_action() == "dup_job"
+        assert ctrl.job_action() is None
+
+
+# ---------------------------------------------------------------------------
+# retry policy + scheduler backoff
+# ---------------------------------------------------------------------------
+
+class TestRetryPolicy:
+    def test_classify_failure(self):
+        assert classify_failure("timeout after 5s") == "timeout"
+        assert classify_failure("nonzero exit 2: boom") == "nonzero"
+        assert classify_failure("host h failed: nope") == "host"
+        assert classify_failure("no live hosts (all 2 quarantined)") == "host"
+        assert classify_failure("lane worker died") == "host"
+        assert classify_failure("ValueError: x") == "error"
+        assert classify_failure(None) == "error"
+
+    def test_from_any_validation(self):
+        with pytest.raises(ValueError, match="unknown retry key"):
+            RetryPolicy.from_any({"maxx": 3})
+        with pytest.raises(ValueError, match="backoff"):
+            RetryPolicy.from_any({"backoff": "cubic"})
+        with pytest.raises(ValueError, match="max must be"):
+            RetryPolicy.from_any({"max": -1})
+        pol = RetryPolicy.from_any(
+            {"max": 2, "backoff": "fixed", "base": 0.5,
+             "retry_on": ["timeout", "HOST"]})
+        assert pol.retries(99) == 2 and pol.backoff == "fixed"
+        assert pol.retry_on == frozenset({"timeout", "host"})
+        assert RetryPolicy.from_any(pol) is pol
+
+    def test_delay_shapes(self):
+        fixed = RetryPolicy(backoff="fixed", base=2.0)
+        assert fixed.delay(1) == fixed.delay(3) == 2.0
+        exp = RetryPolicy(base=1.0, max_delay=5.0)
+        assert exp.delay(1) == 1.0 and exp.delay(2) == 2.0
+        assert exp.delay(4) == 5.0          # capped
+        jit = RetryPolicy(base=1.0, jitter=0.5)
+        d1, d2 = jit.delay(1, key="n"), jit.delay(1, key="n")
+        assert d1 == d2                     # deterministic per (key, k)
+        assert 0.5 <= d1 <= 1.5
+
+    def test_ceiling(self):
+        pol = RetryPolicy.from_any({"max": 3, "base": 3000,
+                                    "max_delay": 86400})
+        assert pol.ceiling() == 12000.0     # 3000 * 2**2
+        # the default max_delay caps the worst case
+        assert RetryPolicy.from_any({"max": 3, "base": 3000}).ceiling() \
+            == 30.0
+        assert RetryPolicy.from_any({"max": 0}).ceiling() == 0.0
+
+    def test_scheduler_backoff_delays_retry(self):
+        clock = VirtualClock()
+        attempts = {"n": 0}
+
+        def flaky(node):
+            attempts["n"] += 1
+            if attempts["n"] == 1:
+                raise RuntimeError("transient")
+            return "ok"
+
+        pool = VirtualPool({"t": 1.0}, clock, call_runner=True)
+        sched = Scheduler(slots=1, clock=clock, max_retries=2,
+                          retry_policy={"base": 10.0, "backoff": "fixed"})
+        dag = TaskDAG()
+        dag.add(TaskNode(id="t", task="t", combo={}, payload={}))
+        results = sched.execute(dag, flaky, pool=pool)
+        assert results["t"].status == "ok" and results["t"].attempts == 2
+        # first attempt finished at t=1; retry waited out the 10s backoff
+        assert clock.now >= 11.0
+
+    def test_retry_on_filters_kinds(self):
+        clock = VirtualClock()
+        calls = {"n": 0}
+
+        def always_raises(node):
+            calls["n"] += 1
+            raise RuntimeError("boom")      # kind "error"
+
+        pool = VirtualPool({"t": 1.0}, clock, call_runner=True)
+        sched = Scheduler(slots=1, clock=clock, max_retries=3,
+                          retry_policy={"base": 0.0,
+                                        "retry_on": ["timeout"]})
+        dag = TaskDAG()
+        dag.add(TaskNode(id="t", task="t", combo={}, payload={}))
+        results = sched.execute(dag, always_raises, pool=pool)
+        assert results["t"].status == "failed"
+        assert calls["n"] == 1              # not a retryable kind
+
+    def test_per_node_policy_overrides_default(self):
+        clock = VirtualClock()
+        calls = {"n": 0}
+
+        def always_raises(node):
+            calls["n"] += 1
+            raise RuntimeError("boom")
+
+        pool = VirtualPool(lambda nid, k: 1.0, clock, call_runner=True)
+        sched = Scheduler(slots=1, clock=clock, max_retries=5,
+                          retry_policy={"base": 0.0})
+        dag = TaskDAG()
+        dag.add(TaskNode(id="t", task="t", combo={},
+                         payload={"retry": {"max": 1, "base": 0.0}}))
+        results = sched.execute(dag, always_raises, pool=pool)
+        assert results["t"].status == "failed"
+        assert calls["n"] == 2              # 1 attempt + max 1 retry
+
+
+# ---------------------------------------------------------------------------
+# lane-kill fault through the engine
+# ---------------------------------------------------------------------------
+
+class TestLaneKill:
+    def test_killed_lane_task_retried_to_success(self, tmp_path):
+        clean = ParameterStudy(parse_yaml(SHELL_WDL), root=tmp_path,
+                               name="clean")
+        clean.run(pool="lane", slots=2)
+        fp_clean = record_fingerprint(clean.db.records())
+
+        plan = FaultPlan([FaultEvent("kill_lane", lane=0, after=1)])
+        faulty = ParameterStudy(parse_yaml(SHELL_WDL), root=tmp_path,
+                                name="faulty")
+        ctrl = plan.controller()
+        results = faulty.run(pool="lane", slots=2, chaos=ctrl,
+                             max_retries=3, retry={"base": 0.01})
+        assert all(r.status == "ok" for r in results.values())
+        assert len(ctrl.ledger) == 1
+        assert record_fingerprint(faulty.db.records()) == fp_clean
+        meta = faulty.db.read_meta()
+        assert meta.get("degraded") is True
+        assert meta["fault_ledger"][0]["fault"] == "kill_lane"
+
+
+# ---------------------------------------------------------------------------
+# host quarantine probation
+# ---------------------------------------------------------------------------
+
+class TestProbation:
+    def test_flaky_host_recovers_through_probation(self):
+        plan = FaultPlan([FaultEvent("fail_host", host="flaky", times=2)])
+
+        def hook(host, command):
+            time.sleep(0.08 if host == "ok" else 0.005)
+            return ShellResult(0, host, "", 0)
+
+        pool = SSHWorkerPool(["flaky", "ok"], ppnode=1,
+                             transport=LocalTransport(hook=hook),
+                             render=render, probation=0.05)
+        with chaos.activated(plan.controller()):
+            results = run(make_dag([f"t{i}" for i in range(6)]), pool,
+                          max_retries=3)
+        assert all(r.status == "ok" for r in results.values())
+        assert "flaky" not in pool.dead_hosts
+        assert "flaky" in {r.host for r in results.values()}
+
+    def test_persistent_failure_exhausts_probation(self):
+        def hook(host, command):
+            time.sleep(0.05)
+            return ShellResult(0, host, "", 0)
+
+        pool = SSHWorkerPool(["bad", "good"], ppnode=1,
+                             transport=LocalTransport(
+                                 fail_hosts=["bad"], hook=hook),
+                             render=render, probation=0.02, max_probes=2)
+        results = run(make_dag([f"t{i}" for i in range(6)]), pool,
+                      max_retries=3)
+        assert all(r.status == "ok" for r in results.values())
+        assert pool.dead_hosts == {"bad"}
+        assert "unreachable" in pool.host_causes["bad"]
+
+    def test_all_hosts_quarantined_is_structured(self):
+        pool = SSHWorkerPool(["a", "b"], ppnode=1,
+                             transport=LocalTransport(fail_hosts=["a", "b"]),
+                             render=render, probation=0.01, max_probes=1)
+        results = run(make_dag(["t1", "t2", "t3"]), pool, max_retries=1)
+        assert all(r.status in ("failed", "skipped")
+                   for r in results.values())
+        exc = pool.all_quarantined
+        assert isinstance(exc, AllHostsQuarantinedError)
+        assert isinstance(exc, TransportError)
+        assert set(exc.causes) == {"a", "b"}
+        msg = str(exc)
+        assert msg.startswith("no live hosts (all 2 quarantined)")
+        assert "a:" in msg and "unreachable" in msg
+
+    def test_probation_zero_is_legacy_immediate_death(self):
+        pool = SSHWorkerPool(["bad", "good"], ppnode=1,
+                             transport=LocalTransport(fail_hosts=["bad"]),
+                             render=render, probation=0.0)
+        results = run(make_dag(["t1", "t2", "t3", "t4"], command="true"),
+                      pool, max_retries=2)
+        assert all(r.status == "ok" for r in results.values())
+        assert pool.dead_hosts == {"bad"}
+
+
+# ---------------------------------------------------------------------------
+# batch-queue faults
+# ---------------------------------------------------------------------------
+
+class TestBatchJobFaults:
+    def test_lose_job_never_spawns(self, tmp_path):
+        marker = tmp_path / "ran"
+        script = tmp_path / "job.sh"
+        script.write_text(f"touch {marker}\n")
+        sub = LocalSubmitter()
+        plan = FaultPlan([FaultEvent("lose_job")])
+        with chaos.activated(plan.controller()):
+            jid = sub.submit(script)
+        assert jid.endswith(".lost") and not sub._procs
+        time.sleep(0.2)
+        assert not marker.exists(), "a lost job must never run"
+        # the next submission is healthy (budget spent)
+        with chaos.activated(plan.controller()) as ctrl:
+            ctrl.job_action()               # burn the single firing
+            jid2 = sub.submit(script)
+        assert not jid2.endswith(".lost")
+        sub._procs[jid2].wait(5)
+        assert marker.exists()
+
+    def test_dup_job_spawns_twice(self, tmp_path):
+        out = tmp_path / "count"
+        script = tmp_path / "job.sh"
+        script.write_text(f"echo x >> {out}\n")
+        sub = LocalSubmitter()
+        plan = FaultPlan([FaultEvent("dup_job")])
+        with chaos.activated(plan.controller()):
+            jid = sub.submit(script)
+        sub._procs[jid].wait(5)
+        for p in sub._dups:
+            p.wait(5)
+        assert len(sub._dups) == 1
+        assert out.read_text().count("x") == 2
+
+
+# ---------------------------------------------------------------------------
+# torn segments: tolerant resume everywhere
+# ---------------------------------------------------------------------------
+
+class TestCorruptTail:
+    def test_truncate_tail_tears_last_line(self, tmp_path):
+        p = tmp_path / "seg"
+        p.write_text('{"a": 1}\n{"b": 22}\n')
+        assert truncate_tail(p)
+        text = p.read_text()
+        assert text.startswith('{"a": 1}\n{"b"')
+        assert not text.endswith("\n")
+        assert not truncate_tail(tmp_path / "empty_missing") \
+            if (tmp_path / "empty_missing").exists() else True
+
+    def test_iter_jsonl_warns_and_drops(self, tmp_path):
+        p = tmp_path / "seg"
+        p.write_text('{"a": 1}\n\n{"b": 2\n{"c": 3}\n')
+        with pytest.warns(RuntimeWarning, match="dropping corrupt"):
+            rows = list(iter_jsonl(p, "test"))
+        assert rows == [{"a": 1}, {"c": 3}]
+
+    def test_journal_resume_survives_torn_tail(self, tmp_path):
+        j = StudyJournal(tmp_path / "journal.json")
+        j.save([{"x": i} for i in range(3)], set(), {"name": "s"})
+        for nid in ("a", "b", "c"):
+            j.mark_complete(nid)
+        truncate_tail(j.log_path)
+        j2 = StudyJournal(tmp_path / "journal.json")
+        with pytest.warns(RuntimeWarning, match="journal"):
+            state = j2.load_state()
+        # the torn final entry is dropped; everything before survives
+        assert state.completed == {"a", "b"}
+
+    def test_db_records_survive_torn_tail(self, tmp_path):
+        db = StudyDB(tmp_path, "s")
+        for i in range(3):
+            db.record(f"t{i}", "ok", 0.0, combo={"i": i})
+        db.close()
+        truncate_tail(db.records_path)
+        db2 = StudyDB(tmp_path, "s")
+        with pytest.warns(RuntimeWarning, match="provenance"):
+            recs = list(db2.records())
+        assert [r["task_id"] for r in recs] == ["t0", "t1"]
+
+    def test_apply_file_faults_is_deterministic(self, tmp_path):
+        for k in range(3):
+            (tmp_path / f"seg.s{k}").write_text('{"n": 1}\n{"n": 2}\n')
+        plan = FaultPlan([FaultEvent("truncate_segment", glob="seg.s*")],
+                         seed=5)
+        torn1 = plan.controller().apply_file_faults(tmp_path)
+        assert len(torn1) == 1
+        # same plan, same tree shape -> same pick
+        for k in range(3):
+            (tmp_path / f"seg.s{k}").write_text('{"n": 1}\n{"n": 2}\n')
+        torn2 = plan.controller().apply_file_faults(tmp_path)
+        assert [p.name for p in torn1] == [p.name for p in torn2]
+
+
+# ---------------------------------------------------------------------------
+# durability ordering: journal flush forces DB flush first
+# ---------------------------------------------------------------------------
+
+class TestPreFlush:
+    def test_journal_flush_drags_db_records_to_disk(self, tmp_path):
+        db = StudyDB(tmp_path, "s", flush_count=100)     # buffered
+        journal = StudyJournal(tmp_path / "s" / "journal.json",
+                               flush_count=1)
+        journal.set_pre_flush(db.flush)
+        db.record("t@1", "ok", 0.0, combo={"x": 1})
+        assert db._writer.n_flushes == 0                 # still buffered
+        journal.save([], set(), {"name": "s"})
+        journal.mark_complete("t@1")                     # flushes journal
+        assert db._writer.n_flushes >= 1, \
+            "journal flush must force the record flush first"
+        assert any(r["task_id"] == "t@1" for r in
+                   iter_jsonl(db.records_path, "t"))
+        journal.set_pre_flush(None)
+        db.record("t@2", "ok", 0.0, combo={"x": 2})
+        n = db._writer.n_flushes
+        journal.mark_complete("t@2")
+        assert db._writer.n_flushes == n                 # hook cleared
+
+    def test_pre_flush_survives_resharding(self, tmp_path):
+        fired = []
+        db = StudyDB(tmp_path, "s2", flush_count=100)
+        journal = StudyJournal(tmp_path / "s2" / "journal.json",
+                               flush_count=1)
+        journal.set_pre_flush(lambda: fired.append(1))
+        journal.set_shards(3)
+        journal.save([], set(), {"name": "s2"})
+        for i in range(3):
+            journal.mark_complete(f"t@{i}")
+        assert len(fired) >= 3, "new shard writers must inherit the hook"
+
+
+# ---------------------------------------------------------------------------
+# WDL retry block + merge + lint
+# ---------------------------------------------------------------------------
+
+class TestWDLRetry:
+    def test_parse_retry_block(self):
+        spec = parse_yaml("""
+t:
+  command: echo hi
+  retry:
+    max: 4
+    backoff: fixed
+    base: 0.5
+    jitter: 0.1
+    retry_on: [timeout, host]
+""")
+        assert spec.tasks["t"].retry == {
+            "max": 4, "backoff": "fixed", "base": 0.5, "jitter": 0.1,
+            "retry_on": ["timeout", "host"]}
+
+    def test_retry_validation_errors(self):
+        from repro.core import WDLError
+        with pytest.raises(WDLError, match="backoff"):
+            parse_yaml("t:\n  command: c\n  retry:\n    backoff: cubic\n")
+        with pytest.raises(WDLError, match="retry"):
+            parse_yaml("t:\n  command: c\n  retry:\n    nope: 1\n")
+        with pytest.raises(WDLError, match="retry_on"):
+            parse_yaml("t:\n  command: c\n  retry:\n"
+                       "    retry_on: [explosions]\n")
+        with pytest.raises(WDLError, match="max"):
+            parse_yaml("t:\n  command: c\n  retry:\n    max: -2\n")
+
+    def test_merge_conflicting_retry_rejected(self):
+        from repro.core import WDLError, merge
+        a = parse_yaml("t:\n  command: c\n  retry:\n    max: 1\n")
+        b = parse_yaml("t:\n  command: c\n  retry:\n    max: 2\n")
+        with pytest.raises(WDLError, match="retry"):
+            merge(a, b)
+        # identical blocks merge fine
+        c = parse_yaml("t:\n  command: c\n  retry:\n    max: 1\n")
+        assert merge(a, c).tasks["t"].retry == {"max": 1}
+
+    def test_retry_reaches_scheduler_payload(self, tmp_path):
+        study = ParameterStudy(
+            parse_yaml("t:\n  command: echo hi\n  retry:\n    max: 2\n"),
+            root=tmp_path, name="s")
+        nodes = study._instance_nodes({})
+        assert nodes[0].payload["retry"] == {"max": 2}
+
+
+class TestLintW701:
+    def _lint(self, wdl):
+        from repro.core.lint import lint
+        return lint(parse_yaml(wdl, validate=False))
+
+    def test_backoff_ceiling_over_timeout_flagged(self):
+        rep = self._lint("""
+t:
+  command: echo hi
+  timeout: 3600
+  retry:
+    max: 3
+    base: 3000
+    max_delay: 86400
+""")
+        w = [f for f in rep.findings if f.rule == "W701"]
+        assert len(w) == 1 and w[0].severity == "warn"
+        assert w[0].task == "t" and w[0].keyword == "retry"
+
+    def test_sane_policy_not_flagged(self):
+        rep = self._lint("""
+t:
+  command: echo hi
+  timeout: 3600
+  retry:
+    max: 3
+    base: 1
+""")
+        assert not [f for f in rep.findings if f.rule == "W701"]
+
+    def test_no_timeout_no_finding(self):
+        rep = self._lint("t:\n  command: c\n  retry:\n    base: 9999\n")
+        assert not [f for f in rep.findings if f.rule == "W701"]
+
+
+# ---------------------------------------------------------------------------
+# fingerprints + degraded report banner
+# ---------------------------------------------------------------------------
+
+class TestFingerprint:
+    def test_latest_ok_wins_and_volatile_fields_ignored(self):
+        a = [{"task_id": "t@1", "status": "failed", "combo": {"x": 1},
+              "runtime": 9.0, "timestamp": 1},
+             {"task_id": "t@1", "status": "ok", "combo": {"x": 1},
+              "runtime": 1.0, "timestamp": 2},
+             {"task_id": "t@2", "status": "ok", "combo": {"x": 2},
+              "host": "lane0", "timestamp": 3}]
+        b = [{"task_id": "t@2", "status": "ok", "combo": {"x": 2},
+              "host": "lane1", "timestamp": 9},
+             {"task_id": "t@1", "status": "ok", "combo": {"x": 1},
+              "runtime": 55.0, "timestamp": 11}]
+        assert record_fingerprint(a) == record_fingerprint(b)
+        assert len(record_fingerprint(a)) == 2
+
+
+class TestDegradedBanner:
+    def test_banner_renders_causes_and_ledger(self, tmp_path):
+        import json
+        from repro.launch.report import degraded_banner
+        d = tmp_path / "study"
+        d.mkdir()
+        (d / "study.json").write_text(json.dumps({
+            "degraded": True, "lost_hosts": ["bad"],
+            "host_causes": {"bad": "host bad unreachable"},
+            "fault_ledger": [{"n": 1, "fault": "fail_host",
+                              "target": "bad", "at": 1}]}))
+        banner = degraded_banner(d)
+        assert banner and "DEGRADED" in banner
+        assert "bad" in banner and "fail_host" in banner
+
+    def test_no_banner_when_healthy(self, tmp_path):
+        import json
+        d = tmp_path / "study"
+        d.mkdir()
+        (d / "study.json").write_text(json.dumps({"name": "s"}))
+        from repro.launch.report import degraded_banner
+        assert degraded_banner(d) is None
+        assert degraded_banner(tmp_path / "nope") is None

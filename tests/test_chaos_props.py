@@ -1,0 +1,70 @@
+"""Property harness for the chaos layer (skips without hypothesis).
+
+The central claim of the chaos subsystem: for ANY seeded fault plan the
+engine either converges on the exact record set of a fault-free run, or
+fails loudly — never a silently different result.
+"""
+import tempfile
+import warnings
+from pathlib import Path
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ParameterStudy, StudyJournal, parse_yaml, record_fingerprint,
+    truncate_tail,
+)
+from repro.core.chaos import FaultPlan
+
+WDL = """
+t:
+  args:
+    x: ["1:5"]
+  command: echo ${args:x}
+"""
+
+
+class TestChaosEquivalence:
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**16))
+    def test_generated_lane_faults_converge_to_clean_run(self, seed):
+        root = Path(tempfile.mkdtemp(prefix="papas_chaos_prop_"))
+        clean = ParameterStudy(parse_yaml(WDL), root=root, name="clean")
+        clean.run(pool="lane", slots=2)
+        fp_clean = record_fingerprint(clean.db.records())
+
+        plan = FaultPlan.generate(seed, lanes=2)
+        faulty = ParameterStudy(parse_yaml(WDL), root=root, name="faulty")
+        results = faulty.run(pool="lane", slots=2, chaos=plan,
+                             max_retries=4, retry={"base": 0.01})
+        assert all(r.status == "ok" for r in results.values())
+        assert record_fingerprint(faulty.db.records()) == fp_clean
+
+        # resume over a finished study is a no-op: same records, no dupes
+        again = ParameterStudy(parse_yaml(WDL), root=root, name="faulty")
+        again.run(pool="lane", slots=2)
+        assert record_fingerprint(again.db.records()) == fp_clean
+
+
+class TestTornTailResume:
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(min_value=1, max_value=8),
+           seed=st.integers(min_value=0, max_value=2**16))
+    def test_torn_journal_tail_loses_at_most_one_entry(self, n, seed):
+        root = Path(tempfile.mkdtemp(prefix="papas_torn_prop_"))
+        j = StudyJournal(root / "journal.json")
+        j.save([{"x": i} for i in range(n)], set(), {"name": "s"})
+        ids = [f"t@{i}" for i in range(n)]
+        for nid in ids:
+            j.mark_complete(nid)
+        assert truncate_tail(j.log_path)
+
+        j2 = StudyJournal(root / "journal.json")
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            state = j2.load_state()
+        assert state.completed <= set(ids)
+        assert len(state.completed) >= n - 1

@@ -99,8 +99,9 @@ class TestRetryAndClosure:
             dag, runner, pool=pool)
         r = res["flaky"]
         assert r.status == "ok" and r.attempts == 2
-        # runtime spans both attempts (2s each, back-to-back)
-        assert r.runtime == pytest.approx(4.0)
+        # runtime spans both attempts (2s each) plus the default
+        # 50 ms retry backoff between them
+        assert r.runtime == pytest.approx(4.05)
 
 
 class TestSpeculation:

@@ -375,7 +375,7 @@ class TestWDLErrorContext:
         rep = lint_cli.lint_file(FIXTURE)
         e101 = next(f for f in rep.errors if f.rule == "E101")
         assert e101.file == str(FIXTURE)
-        assert e101.line == 15    # the prep command line
+        assert e101.line == 16    # the prep command line
         assert e101.keyword_path == "prep.command"
 
 
@@ -383,7 +383,7 @@ class TestFixtureAndExamples:
     def test_broken_fixture_trips_every_seeded_rule(self):
         rep = lint_cli.lint_file(FIXTURE)
         assert _rules(rep) == {"E101", "E201", "E202", "E203",
-                               "E301", "E403", "E502", "W601"}
+                               "E301", "E403", "E502", "W601", "W701"}
         assert not rep.ok
 
     def test_shipped_examples_lint_clean(self):

@@ -112,10 +112,12 @@ class TestHostFailure:
             time.sleep(0.05)
             return ShellResult(0, h, "", 0)
 
+        # probation=0.0: legacy immediate permanent quarantine (the
+        # probation path has its own coverage in test_chaos.py)
         pool = SSHWorkerPool(["bad", "good"], ppnode=1,
                              transport=LocalTransport(
                                  fail_hosts=["bad"], hook=hook),
-                             render=render)
+                             render=render, probation=0.0)
         results = run(make_dag(["t1", "t2", "t3", "t4", "t5", "t6"]), pool,
                       max_retries=2)
         assert all(r.status == "ok" for r in results.values())
