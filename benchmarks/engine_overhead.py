@@ -26,11 +26,22 @@ with the throughput levers enabled one at a time — selector mux alone
 batch sizing, plus sharded group commit (= the default stack) — so a
 regression names its lever.  ``engine_spawn_*`` microbenches the
 ``run_subprocess`` spawn paths (``posix_spawn`` vs ``subprocess.run``).
+
+The harness rows quantify the two always-in-the-path seams:
+``lane_chaos`` re-runs the lane sweep with an armed fault plan that
+SIGKILLs one lane mid-sweep (retried to completion — the chaos
+harness's tax when faults actually fire); ``lane_telemetry`` re-runs it
+with the telemetry layer armed (spans + counters on every
+dispatch/frame/flush) and ``lane_telemetry_off`` with it explicitly
+disarmed — the latter measures only the seams' identity checks and is
+gated at ≥95% of the recorded floor, the zero-cost-when-off contract.
+
 ``--throughput`` runs only these rows, writes them as a JSON artifact
 (``BENCH_throughput.json``; override with ``PAPAS_BENCH_OUT``), and
 exits nonzero if the lane pool regresses below half the recorded
-baseline (the CI floor), loses its ≥5× margin over the thread pool, or
-capture drops below 80% of the bare-lane floor.
+baseline (the CI floor), loses its ≥5× margin over the thread pool,
+capture drops below 80% of the bare-lane floor, or disarmed telemetry
+drops below 95% of it.
 """
 from __future__ import annotations
 
@@ -41,9 +52,9 @@ import tempfile
 import time
 from pathlib import Path
 
-from repro.core import InlinePool, LaneWorkerPool, LocalTransport, \
-    ParameterStudy, Scheduler, StudyJournal, TaskDAG, TaskNode, make_pool, \
-    parse_yaml, run_subprocess
+from repro.core import FaultEvent, FaultPlan, InlinePool, LaneWorkerPool, \
+    LocalTransport, ParameterStudy, Scheduler, StudyJournal, TaskDAG, \
+    TaskNode, Telemetry, make_pool, parse_yaml, run_subprocess
 
 N_SLEEP = 32
 SLEEP_S = 0.05
@@ -181,6 +192,23 @@ def _throughput_rows() -> list[tuple[str, float, dict]]:
             ("windowed_lane", dict(pool="lane", slots=SLOTS, window=256,
                                    keep_results=False)),
             ("lane_capture", dict(pool="lane", slots=SLOTS)),
+            # chaos-armed: one lane SIGKILL mid-sweep, retried to
+            # completion — the harness's tax when a fault actually fires
+            ("lane_chaos", dict(
+                pool="lane", slots=SLOTS, max_retries=3,
+                retry={"base": 0.01},
+                chaos=FaultPlan([FaultEvent("kill_lane", lane=0,
+                                            after=50)]).controller())),
+            # telemetry-armed: spans + counters on every dispatch,
+            # lane frame, and group-commit flush
+            ("lane_telemetry", dict(pool="lane", slots=SLOTS,
+                                    trace=Telemetry())),
+            # telemetry explicitly disarmed (trace=False also shields
+            # against a PAPAS_TRACE env leak): the seams' identity
+            # checks only — the zero-cost-when-off contract, gated in
+            # check_throughput_floor()
+            ("lane_telemetry_off", dict(pool="lane", slots=SLOTS,
+                                        trace=False)),
         ]
         for label, kwargs in cases:
             wdl = WDL_NOOP_CAPTURE if label == "lane_capture" else WDL_NOOP
@@ -265,6 +293,29 @@ def _throughput_rows() -> list[tuple[str, float, dict]]:
                       100 * (1 - tps["lane_capture"] / tps["lane"]), 1),
                   "floor_tasks_per_sec": round(capture_floor),
                   "above_floor": tps["lane_capture"] >= capture_floor}))
+    # harness tax rows: the chaos seam with a fault actually firing, and
+    # the telemetry seam armed vs disarmed.  Only the *disarmed* row is
+    # gated (vs the recorded floor, stable across runs) — armed cost is
+    # an informed choice, disarmed cost would be a tax on everyone.
+    rows.append(("engine_chaos_overhead", 0.0,
+                 {"chaos_tasks_per_sec": round(tps["lane_chaos"]),
+                  "bare_tasks_per_sec": round(tps["lane"]),
+                  "measured_overhead_pct": round(
+                      100 * (1 - tps["lane_chaos"] / tps["lane"]), 1)}))
+    telemetry_floor = 0.95 * (LANE_TASKS_PER_SEC_BASELINE / 2)
+    rows.append(("engine_telemetry_overhead", 0.0,
+                 {"armed_tasks_per_sec": round(tps["lane_telemetry"]),
+                  "disarmed_tasks_per_sec":
+                      round(tps["lane_telemetry_off"]),
+                  "bare_tasks_per_sec": round(tps["lane"]),
+                  "armed_overhead_pct": round(
+                      100 * (1 - tps["lane_telemetry"] / tps["lane"]), 1),
+                  "disarmed_overhead_pct": round(
+                      100 * (1 - tps["lane_telemetry_off"] / tps["lane"]),
+                      1),
+                  "floor_tasks_per_sec": round(telemetry_floor),
+                  "above_floor": tps["lane_telemetry_off"]
+                  >= telemetry_floor}))
     return rows
 
 
@@ -301,13 +352,15 @@ def check_throughput_floor() -> int:
     over the thread pool."""
     rows = _spawn_rows() + _throughput_rows()
     _write_artifact(rows)
-    ok = capture_ok = True
+    ok = capture_ok = telemetry_ok = True
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
         if name == "engine_lane_speedup_vs_thread":
             ok = derived["meets_5x"] and derived["above_floor"]
         if name == "engine_capture_overhead":
             capture_ok = derived["above_floor"]
+        if name == "engine_telemetry_overhead":
+            telemetry_ok = derived["above_floor"]
     if not ok:
         print("FAIL: lane-pool throughput regressed "
               f"(floor {LANE_TASKS_PER_SEC_BASELINE / 2:.0f} tasks/s, "
@@ -319,7 +372,13 @@ def check_throughput_floor() -> int:
               f"{LANE_TASKS_PER_SEC_BASELINE / 2:.0f} tasks/s bare-lane "
               "floor)", file=sys.stderr)
         return 1
-    print("throughput floor OK (incl. capture overhead)")
+    if not telemetry_ok:
+        print("FAIL: disarmed telemetry regressed the lane path "
+              f"(must stay >= 95% of the "
+              f"{LANE_TASKS_PER_SEC_BASELINE / 2:.0f} tasks/s bare-lane "
+              "floor — the zero-cost-when-off contract)", file=sys.stderr)
+        return 1
+    print("throughput floor OK (incl. capture + telemetry overhead)")
     return 0
 
 

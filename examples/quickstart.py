@@ -46,6 +46,18 @@ the canned plans in ``examples/chaos/``): lane-worker kills retried to
 a byte-identical record set, host failures quarantined and *recovered*
 through probation, and a mid-run SIGKILL + torn journal segment that
 resume must replay exactly — the CI chaos gate runs all three.
+
+    PYTHONPATH=src python examples/quickstart.py --trace --status
+
+runs the telemetry smoke (``repro.core.telemetry``): a chaos-armed
+windowed lane study with the trace collector, the ``/metrics`` HTTP
+endpoint, and the live status line armed.  The smoke asserts the
+written ``trace.json`` is schema-valid Chrome trace-event JSON (every
+``B`` closed, per-track stack discipline), that its dispatch spans
+cover every completed instance, that the ``study.json`` counter
+snapshot matches the results, and that ``/metrics`` reports nonzero
+retry + fault counters — then prints where to load the trace
+(https://ui.perfetto.dev).
 """
 import argparse
 import resource
@@ -355,6 +367,100 @@ def run_chaos_sigkill() -> None:
           f"idempotent")
 
 
+# telemetry smoke: enough instances that the kill_lane fault lands
+# mid-stream and the status line gets several redraws.  Every task
+# fails its first attempt (marker file + `false` — `exit` would kill
+# the persistent lane shell) so the retry counters are deterministic,
+# not a race against how fast the killed frame drained.
+TRACE_MARKERS = "/tmp/papas_quickstart/trace_markers"
+TRACE_WDL = """
+trace:
+  args:
+    i: ["1:200"]
+  command: "test -e %s/t${args:i} || { : > %s/t${args:i}; false; }"
+""" % (TRACE_MARKERS, TRACE_MARKERS)
+
+
+def run_trace(status: bool = False, slots: int = 2,
+              window: int = 32) -> None:
+    """Telemetry smoke: a chaos-armed windowed lane study with the
+    trace collector, the ``/metrics`` endpoint, and (optionally) the
+    live status line — asserts trace schema validity, span coverage,
+    counter ground truth, and nonzero fault/retry counters."""
+    import json as json_mod
+    import shutil
+    import urllib.request
+
+    from repro.core import FaultEvent, FaultPlan, Telemetry
+
+    shutil.rmtree(CHAOS_ROOT / "quickstart_trace", ignore_errors=True)
+    shutil.rmtree(TRACE_MARKERS, ignore_errors=True)
+    Path(TRACE_MARKERS).mkdir(parents=True)
+    study = ParameterStudy(parse_yaml(TRACE_WDL), root=CHAOS_ROOT,
+                           name="quickstart_trace")
+    tel = Telemetry()
+    port = tel.serve(0)
+    if status:
+        tel.attach_status()
+    plan = FaultPlan([FaultEvent("kill_lane", lane=0, after=20)])
+    results = study.run(
+        pool="lane", slots=slots, window=window, trace=tel,
+        chaos=plan.controller(), max_retries=3, retry={"base": 0.01},
+        on_result=(lambda r: tel.tick()) if status else None)
+    if status:
+        tel.finish_status()
+    n_ok = sum(1 for r in results.values() if r.status == "ok")
+    assert n_ok == len(results) == 200, \
+        f"trace smoke: {n_ok}/{len(results)} instances ok"
+
+    # query /metrics while the server is still up: the injected fault
+    # and the retries it forced must be visible as nonzero counters
+    with urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/metrics", timeout=10) as resp:
+        text = resp.read().decode()
+    tel.close()
+
+    def family_sum(prefix: str) -> float:
+        return sum(float(ln.rsplit(" ", 1)[1]) for ln in text.splitlines()
+                   if ln.startswith(prefix) and not ln.startswith("#"))
+
+    assert family_sum("papas_faults_total") >= 1, \
+        "trace smoke: fault counter empty despite an armed kill_lane plan"
+    assert family_sum("papas_retries_total") >= 1, \
+        "trace smoke: retry counter empty despite a lane kill"
+
+    # trace.json: schema-valid Chrome trace events — every B closed,
+    # per-track stack discipline intact
+    trace_path = study.db.dir / "trace.json"
+    doc = json_mod.loads(trace_path.read_text())
+    events = doc["traceEvents"]
+    depth: dict = {}
+    for ev in events:
+        if ev["ph"] == "B":
+            depth[ev["tid"]] = depth.get(ev["tid"], 0) + 1
+        elif ev["ph"] == "E":
+            depth[ev["tid"]] = depth.get(ev["tid"], 0) - 1
+            assert depth[ev["tid"]] >= 0, "trace smoke: E without B"
+    assert all(d == 0 for d in depth.values()), \
+        f"trace smoke: unclosed B spans per tid: {depth}"
+    # dispatch spans cover every completed instance (>=: the killed
+    # attempt is a span too)
+    covered = sum(ev.get("args", {}).get("tasks", 0) for ev in events
+                  if ev["ph"] == "B" and ev.get("cat") == "dispatch")
+    assert covered >= n_ok, \
+        f"trace smoke: spans cover {covered}/{n_ok} instances"
+    snap = study.db.read_meta()["telemetry"]
+    assert snap.get("papas_tasks_completed_total") == n_ok, \
+        "trace smoke: completed counter diverges from the results"
+    print(f"[trace] {n_ok} instances, {len(events)} trace events, "
+          f"{covered} instance-dispatches spanned, "
+          f"{family_sum('papas_faults_total'):.0f} fault(s), "
+          f"{family_sum('papas_retries_total'):.0f} retry(s)")
+    print(f"[trace] wrote {trace_path} — load it in "
+          f"https://ui.perfetto.dev (one track per slot/lane/commit "
+          f"segment; chaos firings are instant events)")
+
+
 # lint smoke: a study seeded with one of every static-defect class the
 # analyzer must catch — never runnable, only linted
 BROKEN_WDL = """
@@ -450,9 +556,20 @@ def main():
                          "segment, and asserts resume equivalence")
     ap.add_argument("--chaos-child", action="store_true",
                     help=argparse.SUPPRESS)
+    ap.add_argument("--trace", action="store_true",
+                    help="run the telemetry smoke: a chaos-armed "
+                         "windowed lane study with Chrome-trace output, "
+                         "the /metrics endpoint, and span/counter "
+                         "assertions (see repro.core.telemetry)")
+    ap.add_argument("--status", action="store_true",
+                    help="with --trace: also drive the in-place live "
+                         "status line while the study runs")
     args = ap.parse_args()
     if args.chaos_child:
         run_chaos_child()
+        return
+    if args.trace or args.status:
+        run_trace(status=args.status)
         return
     if args.chaos:
         {"lane": run_chaos_lane, "host": run_chaos_host,

@@ -38,6 +38,13 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
     tests/test_lint.py tests/test_lint_props.py tests/test_locklint.py
 
+# observability: the telemetry layer — Chrome-trace schema validity
+# (every B closed, stable tids across lane respawns), retry-backoff
+# span timings under VirtualClock, and metrics counters checked against
+# ScheduleEvent ground truth on a seeded chaos run — pinned by name
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+    tests/test_telemetry.py
+
 # lint gate, positive half: every shipped example must lint clean even
 # under --strict (zero findings is what keeps the gate honest)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.lint \
@@ -58,7 +65,7 @@ doc = json.load(open("/tmp/papas_lint.json"))
 (rep,) = doc["files"].values()
 ids = {f["rule"] for f in rep["findings"]}
 want = {"E101", "E201", "E202", "E203", "E301", "E403", "E502", "W601",
-        "W701"}
+        "W701", "W802"}
 missing = want - ids
 assert not missing, f"lint gate: fixture rules not flagged: {sorted(missing)}"
 print(f"lint gate: fixture flagged {len(want)} seeded rule id(s)")
@@ -124,13 +131,21 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py \
     --chaos sigkill
 
+# telemetry smoke: a chaos-armed windowed lane study with --trace
+# --status — the example asserts the trace JSON loads, every B span is
+# closed, spans cover every recorded instance, and the /metrics
+# endpoint reports nonzero retry + fault counters
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py \
+    --trace --status
+
 # short-task throughput floor: 10^4 no-op tasks through thread vs lane
 # vs windowed-lane vs lane+capture, plus per-lever rows (mux /
-# adaptive-batch / sharded) and the spawn-path microbench; writes
-# BENCH_throughput.json and fails if the lane pool drops below half the
-# recorded 10^4 tasks/s baseline (5000 tasks/s floor, raised from 900
-# with the selector-mux dispatch path), loses its >=5x margin over the
-# thread pool, or metric capture costs more than 20% of the bare-lane
-# floor
+# adaptive-batch / sharded), chaos-armed and telemetry-armed/disarmed
+# rows, and the spawn-path microbench; writes BENCH_throughput.json and
+# fails if the lane pool drops below half the recorded 10^4 tasks/s
+# baseline (5000 tasks/s floor, raised from 900 with the selector-mux
+# dispatch path), loses its >=5x margin over the thread pool, metric
+# capture costs more than 20% of the bare-lane floor, or the *disarmed*
+# telemetry seams cost more than 5% of it (zero-cost-when-off contract)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python \
     benchmarks/engine_overhead.py --throughput

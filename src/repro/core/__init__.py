@@ -88,6 +88,7 @@ from .scheduler import (
 from .staging import collect_outputs, stage_instance
 from .state import JournalState, StudyJournal, compress_ranges, expand_ranges
 from .study import InstanceWindow, ParameterStudy, load_study
+from .telemetry import MetricsRegistry, Telemetry, TraceCollector
 from .viz import to_ascii, to_dot
 from .wdl import (
     RESERVED_KEYWORDS,
@@ -133,6 +134,7 @@ __all__ = [
     "JournalState", "StudyJournal", "compress_ranges", "expand_ranges",
     "collect_outputs", "stage_instance",
     "InstanceWindow", "ParameterStudy", "load_study",
+    "MetricsRegistry", "Telemetry", "TraceCollector",
     "to_ascii", "to_dot",
     "RESERVED_KEYWORDS", "StudySpec", "TaskSpec", "WDLError", "merge",
     "parse_dict", "parse_file", "parse_ini", "parse_json", "parse_range",

@@ -58,9 +58,12 @@ import os
 import random
 import signal
 import threading
+import time
 from contextlib import contextmanager
 from pathlib import Path
 from typing import Any, Iterable, Iterator, Mapping
+
+from . import telemetry as _telemetry
 
 __all__ = ["FAULT_KINDS", "FaultEvent", "FaultPlan", "FaultLedger",
            "ChaosController", "current", "install", "activated",
@@ -124,6 +127,14 @@ class FaultLedger:
             self._entries.append(
                 {"n": len(self._entries) + 1, "fault": kind,
                  "target": target, "at": at})
+        tel = _telemetry.current()
+        if tel is not None:
+            # chaos firings surface in the trace as instant events on a
+            # dedicated track, and as a labeled counter family
+            tel.trace.instant("chaos", f"{kind}:{target}",
+                              time.monotonic(), cat="chaos",
+                              args={"at": at})
+            tel.metrics.counter("papas_faults_total", kind=kind).inc()
 
     def as_list(self) -> list[dict[str, Any]]:
         with self._lock:

@@ -54,6 +54,7 @@ from pathlib import Path
 from typing import Any, Callable, Hashable, Mapping, Sequence, TYPE_CHECKING
 
 from . import chaos
+from . import telemetry
 from .dag import TaskNode
 from .locklint import make_lock
 
@@ -564,10 +565,11 @@ class LaneWorkerPool(WorkerPool):
         self.reuse_spool = (not capture_stderr if reuse_spool is None
                             else reuse_spool)
         self.stats = LaneStats()
-        # chaos capture at construction (the make_lock pattern): when no
-        # plan is armed this is None and the frame hot path pays one
-        # identity check
+        # chaos/telemetry capture at construction (the make_lock
+        # pattern): when nothing is armed these are None and the frame
+        # hot path pays one identity check each
         self._chaos = chaos.current()
+        self._telemetry = telemetry.current()
         self._base_env = dict(os.environ)   # snapshot once per pool
         # per-pool random rc sentinel: task stdout flows back inline over
         # the lane pipe, framed by a marker real output cannot guess
@@ -630,6 +632,9 @@ class LaneWorkerPool(WorkerPool):
             k = j
         out = ready[:k]
         del ready[:k]
+        if self._telemetry is not None and out:
+            self._telemetry.metrics.histogram(
+                "papas_lane_batch_size").observe(len(out))
         return out
 
     def submit(self, token: int, runner: Runner | None,
@@ -767,6 +772,9 @@ class LaneWorkerPool(WorkerPool):
         with self._lock:
             self._dur_med.add(runtime)
             self._dur_p90.add(runtime)
+        if self._telemetry is not None:
+            self._telemetry.metrics.histogram(
+                "papas_lane_frame_seconds").observe(runtime)
 
     # -- mux event loop ------------------------------------------------
     def _mux(self) -> None:
@@ -887,6 +895,9 @@ class LaneWorkerPool(WorkerPool):
         lane.want_write = False
         sel.register(proc.stdout, selectors.EVENT_READ, ("out", lane))
         self.stats.respawns += 1
+        if self._telemetry is not None:
+            self._telemetry.metrics.counter(
+                "papas_lane_respawns_total").inc()
 
     def _close_proc(self, sel: selectors.BaseSelector, lane: _Lane) -> None:
         proc = lane.proc
@@ -1132,6 +1143,13 @@ class LaneWorkerPool(WorkerPool):
     def _account_and_emit(self, job: _LaneJob, idx: int, t1: float) -> None:
         self.stats.dispatches += 1
         self.stats.tasks += len(job.nodes)
+        tel = self._telemetry
+        if tel is not None:
+            # retroactive frame slice: both ends known, one lane track
+            # per index (the tid survives respawns — keyed by name)
+            tel.trace.complete(
+                f"lane{idx}", f"{job.nodes[0].task} x{len(job.nodes)}",
+                job.t0, t1, cat="lane", args={"tasks": len(job.nodes)})
         self._emit(job.token, job.values, job.errors, job.t0, t1,
                    f"lane{idx}")
 

@@ -40,6 +40,8 @@ import warnings
 from pathlib import Path
 from typing import Any, Callable, Iterator
 
+from . import telemetry as _telemetry
+
 _SEG_RE = re.compile(r"\.s(\d+)$")
 
 
@@ -110,6 +112,12 @@ class GroupCommitWriter:
             return
         if self.pre_flush is not None:
             self.pre_flush()
+        # telemetry consulted per *flush*, not per append, so the cost
+        # rides the already-amortized path (writers outlive any single
+        # armed run, so a construction-time capture would go stale)
+        tel = _telemetry.current()
+        t0 = time.monotonic() if tel is not None else 0.0
+        n = len(self._buf)
         if self._file is None:
             self.path.parent.mkdir(parents=True, exist_ok=True)
             self._file = self.path.open("a")
@@ -118,6 +126,14 @@ class GroupCommitWriter:
         self._buf.clear()
         self.n_flushes += 1
         self._last_flush = time.monotonic()
+        if tel is not None:
+            tel.metrics.counter("papas_groupcommit_flushes_total",
+                                segment=self.path.name).inc()
+            tel.metrics.counter("papas_groupcommit_lines_total",
+                                segment=self.path.name).inc(n)
+            tel.trace.complete(f"commit:{self.path.name}", f"flush x{n}",
+                               t0, self._last_flush, cat="commit",
+                               args={"lines": n})
 
     def close(self) -> None:
         """Flush and release the long-lived handle."""
@@ -208,6 +224,19 @@ class ShardedGroupCommit:
             if m and p.name[:-len(m.group(0))] == self.path.name:
                 extra.append((int(m.group(1)), p))
         out.extend(p for _, p in sorted(extra))
+        return out
+
+    def shard_counters(self) -> list[dict[str, Any]]:
+        """Per-segment append/flush counters — the telemetry snapshot's
+        ``group-commit per shard`` payload.  Totals retired by
+        ``set_shards`` re-splits are reported on a synthetic entry so
+        the sum always matches ``n_appends``/``n_flushes``."""
+        out = [{"segment": w.path.name, "appends": w.n_appends,
+                "flushes": w.n_flushes} for w in self._writers]
+        if self._retired_appends or self._retired_flushes:
+            out.append({"segment": "(retired)",
+                        "appends": self._retired_appends,
+                        "flushes": self._retired_flushes})
         return out
 
     def unlink_segments(self) -> None:

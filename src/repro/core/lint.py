@@ -40,6 +40,7 @@ E506 error conflicting ``straggler_quantile`` across tasks
 W601 warn  estimated sweep runtime exceeds the study budget
 I601 info  sweep cost estimate (count × duration / slots)
 W701 warn  retry backoff ceiling exceeds the task timeout
+W802 warn  capture metric declared but consumed by nothing
 E901 error engine lock acquisition-order cycle (locklint pack)
 == ======= ====================================================
 
@@ -143,6 +144,7 @@ RULES: dict[str, Rule] = {r.id: r for r in (
     Rule("W601", "warn", "estimated runtime exceeds budget"),
     Rule("I601", "info", "sweep cost estimate"),
     Rule("W701", "warn", "retry backoff ceiling exceeds task timeout"),
+    Rule("W802", "warn", "capture metric declared but never consumed"),
     Rule("E901", "error", "lock acquisition-order cycle"),
 )}
 
@@ -691,6 +693,45 @@ def check_retry(ctx: LintContext) -> None:
                 f"{_fmt_duration(timeout)} — retries would idle the "
                 f"slot longer than the task may run",
                 task=tname, keyword="retry")
+
+
+@check
+def check_dead_captures(ctx: LintContext) -> None:
+    """W802 — a declared capture should be consumed by something.
+
+    A ``capture:`` metric that is not ``required:``, is not a builtin
+    passthrough, and is referenced by no ``baseline:`` key is extracted
+    on every instance and then dropped on the floor — usually a
+    leftover from an earlier report shape, sometimes a typo'd name on
+    the consuming side.  Report axes chosen at the CLI (``--group-by``,
+    ``--metric``) are invisible statically, so this is a warning, never
+    an error."""
+    consumed: set[str] = set()
+    for task in ctx.spec.tasks.values():
+        consumed.update(task.baseline)
+    for tname, task in ctx.spec.tasks.items():
+        for mname, cap in task.capture.items():
+            if getattr(cap, "required", False):
+                continue   # a contract with the run: missing = failure
+            if getattr(cap, "kind", None) == "builtin":
+                continue   # zero extraction cost — nothing is wasted
+            used = False
+            for bkey in consumed:
+                try:
+                    if resolve_key(bkey, {mname}) is not None:
+                        used = True
+                        break
+                except KeyResolutionError:
+                    used = True   # ambiguous — it may be this metric
+                    break
+            if not used:
+                ctx.emit(
+                    "W802",
+                    f"capture {mname!r} is extracted on every instance "
+                    f"but consumed by nothing in the study file (no "
+                    f"baseline: reference, not required:) — dead "
+                    f"metric, or a typo on the consuming side",
+                    task=tname, keyword=f"capture.{mname}")
 
 
 # ---------------------------------------------------------------------------

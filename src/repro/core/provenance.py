@@ -188,16 +188,43 @@ class StudyDB:
                 out.setdefault(task, set()).add(int(r["index"]))
         return out
 
+    def shard_counters(self) -> list[dict[str, Any]]:
+        """Per-segment group-commit counters (telemetry snapshot)."""
+        return self._writer.shard_counters()
+
     # -- profiler summary --------------------------------------------------
-    def runtime_summary(self) -> dict[str, Any]:
-        times = [r["runtime"] for r in self.records() if r["status"] == "ok"]
-        if not times:
-            return {"count": 0}
-        times.sort()
-        return {
-            "count": len(times),
-            "total": sum(times),
-            "min": times[0],
-            "median": times[len(times) // 2],
-            "max": times[-1],
-        }
+    def runtime_summary(self, by: str | None = None) -> dict[str, Any]:
+        """Runtime statistics over the ok records.
+
+        ``by=None`` (default) returns one whole-study summary dict;
+        ``by="task"`` / ``by="host"`` returns ``{group: summary}`` —
+        the per-task / per-host table ``launch/report.py`` renders.
+        """
+        if by is None:
+            return _times_summary(
+                [r["runtime"] for r in self.records()
+                 if r["status"] == "ok"])
+        if by not in ("task", "host"):
+            raise ValueError(f"runtime_summary by must be 'task' or "
+                             f"'host', got {by!r}")
+        groups: dict[str, list[float]] = {}
+        for r in self.records():
+            if r["status"] != "ok":
+                continue
+            key = (r["task_id"].partition("@")[0] if by == "task"
+                   else str(r.get("host") or "local"))
+            groups.setdefault(key, []).append(r["runtime"])
+        return {k: _times_summary(v) for k, v in sorted(groups.items())}
+
+
+def _times_summary(times: list[float]) -> dict[str, Any]:
+    if not times:
+        return {"count": 0}
+    times.sort()
+    return {
+        "count": len(times),
+        "total": sum(times),
+        "min": times[0],
+        "median": times[len(times) // 2],
+        "max": times[-1],
+    }

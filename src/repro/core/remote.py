@@ -53,6 +53,7 @@ from pathlib import Path
 from typing import Any, Callable, Mapping, Sequence, TYPE_CHECKING
 
 from . import chaos as _chaos
+from . import telemetry as _telemetry
 from .dag import TaskNode
 from .locklint import make_lock
 from .executors import (
@@ -351,6 +352,9 @@ class SSHWorkerPool(WorkerPool):
         self.all_quarantined: AllHostsQuarantinedError | None = None
         self._live = self.slots
         self._shutdown = False
+        # observability seam, captured before the lanes start (None
+        # when disarmed — one identity check per dispatch)
+        self._telemetry = _telemetry.current()
         self._threads = [
             threading.Thread(target=self._worker, args=(host, lane),
                              name=f"papas-ssh-{host}-{lane}", daemon=True)
@@ -439,7 +443,7 @@ class SSHWorkerPool(WorkerPool):
                     self._emit(item, [None] * len(item.nodes),
                                [_CANCELLED] * len(item.nodes), host)
                     continue
-                cause = self._run_dispatch(item, host)
+                cause = self._run_dispatch(item, host, lane)
                 if cause is not None and self._host_struck(host, cause):
                     return
         finally:
@@ -459,25 +463,39 @@ class SSHWorkerPool(WorkerPool):
             strikes = self._strikes.get(host, 0) + 1
             self._strikes[host] = strikes
             self.host_causes[host] = cause
-            if self.probation > 0 and strikes <= self.max_probes:
+            retire = not (self.probation > 0 and strikes <= self.max_probes)
+            if retire:
+                self.quarantine.pop(host, None)
+                self.dead_hosts.add(host)
+            else:
                 self.quarantine[host] = (
                     time.monotonic()
                     + self.probation * (2 ** min(strikes - 1, 16)))
-                return False
-            self.quarantine.pop(host, None)
-            self.dead_hosts.add(host)
-            return True
+        tel = self._telemetry
+        if tel is not None:
+            tel.metrics.counter("papas_host_strikes_total", host=host).inc()
+            if retire:
+                tel.metrics.counter("papas_hosts_dead_total").inc()
+            else:
+                tel.metrics.counter("papas_host_probes_total",
+                                    host=host).inc()
+        return retire
 
     def _host_recovered(self, host: str) -> None:
         """A successful dispatch on a previously-striking host: the
         probe passed, so quarantine and strikes clear."""
+        recovered = False
         with self._lock:
             if host in self._strikes:
                 self._strikes.pop(host, None)
                 self.quarantine.pop(host, None)
+                recovered = True
+        if recovered and self._telemetry is not None:
+            self._telemetry.metrics.counter(
+                "papas_host_recoveries_total", host=host).inc()
 
-    def _run_dispatch(self, item: _RemoteDispatch,
-                      host: str) -> "str | None":
+    def _run_dispatch(self, item: _RemoteDispatch, host: str,
+                      lane: int = 0) -> "str | None":
         """Run one dispatch on ``host``; a non-None return is the
         transport failure that means the host failed."""
         t0 = time.monotonic()
@@ -508,6 +526,16 @@ class SSHWorkerPool(WorkerPool):
                     ran_any = True
         if cause is None and ran_any:
             self._host_recovered(host)
+        tel = self._telemetry
+        if tel is not None:
+            # one track per host lane: dispatches on a lane are
+            # sequential, so the retroactive slice pair nests cleanly
+            tel.trace.complete(
+                f"host:{host}/{lane}",
+                f"{item.nodes[0].task} x{len(item.nodes)}",
+                t0, time.monotonic(), cat="host",
+                args={"tasks": len(item.nodes),
+                      "transport_failure": cause or ""})
         self._emit(item, values, errors, host, t0)
         return cause
 

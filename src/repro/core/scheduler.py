@@ -57,6 +57,7 @@ import random
 import time
 from typing import Any, Callable, Mapping
 
+from . import telemetry
 from .dag import DAGError, TaskDAG, TaskNode
 from .executors import CompletionEvent, InlinePool, WorkerPool
 from .stats import StreamingMedian as _StreamingMedian  # noqa: F401 (back-compat)
@@ -373,6 +374,9 @@ class Scheduler:
         self.speculate = speculate
         self.retry_policy = RetryPolicy.from_any(retry_policy)
         self._retry_cache: dict[str, RetryPolicy] = {}
+        #: observability seam, captured once (None when disarmed — the
+        #: loop then pays one identity check per event and nothing else)
+        self._telemetry = telemetry.current()
         #: live-node high-water mark of the last run (streaming admission
         #: bounds it near ``slots + window``; eager runs see the full DAG)
         self.peak_live_nodes = 0
@@ -512,6 +516,23 @@ class Scheduler:
     ) -> dict[str, TaskResult]:
         streaming = source is not None
         win_ctrl = window if isinstance(window, AdaptiveWindow) else None
+        tel = self._telemetry
+        if tel is not None:
+            # resolve series handles once: armed steady-state cost is a
+            # lock + add per event, never a registry lookup
+            mtr = tel.metrics
+            m_admitted = mtr.counter("papas_nodes_admitted_total")
+            m_dispatched = mtr.counter("papas_tasks_dispatched_total")
+            m_completed = mtr.counter("papas_tasks_completed_total")
+            m_failed = mtr.counter("papas_tasks_failed_total")
+            m_skipped = mtr.counter("papas_tasks_skipped_total")
+            m_abandoned = mtr.counter("papas_dispatches_abandoned_total")
+            m_expired = mtr.counter("papas_dispatches_expired_total")
+            g_running = mtr.gauge("papas_tasks_running")
+            g_retrying = mtr.gauge("papas_tasks_retrying")
+            g_ready = mtr.gauge("papas_ready_depth")
+            g_slots = mtr.gauge("papas_slots_busy")
+            h_runtime = mtr.histogram("papas_task_runtime_seconds")
         succ = dag.successors()
         indeg = {nid: sum(1 for d in n.deps if d not in completed)
                  for nid, n in dag.nodes.items()}
@@ -586,6 +607,14 @@ class Scheduler:
                 results[res.id] = res
             if res.status == "ok":
                 runtimes.add(res.runtime)
+            if tel is not None:
+                if res.status == "ok":
+                    m_completed.inc()
+                    h_runtime.observe(res.runtime)
+                elif res.status == "failed":
+                    m_failed.inc()
+                else:
+                    m_skipped.inc()
             if on_result:
                 on_result(res)      # node still live: dag.nodes[res.id] ok
             for s in succ[res.id]:
@@ -635,6 +664,8 @@ class Scheduler:
                         if d not in done_ids and d not in completed)
                 expected += len(nodes)
                 admitted_any = True
+                if tel is not None:
+                    m_admitted.inc(len(nodes))
                 for node in nodes:
                     if node.id in done_ids:
                         # already complete (resume): resolved silently,
@@ -662,6 +693,11 @@ class Scheduler:
             if d is None:
                 return
             abandoned[token] = d.slot
+            if tel is not None:
+                m_abandoned.inc()
+                g_running.add(-len(d.nids))
+                tel.trace.end(f"slot{d.slot}", self.clock(), cat="dispatch",
+                              args={"outcome": "abandoned"})
             for nid in d.nids:
                 live_tokens.get(nid, set()).discard(token)
             pool.cancel(token)
@@ -691,6 +727,17 @@ class Scheduler:
                 live_tokens.setdefault(nid, set()).add(token)
             running[token] = _Dispatch(token, nids, slot, now, budget,
                                        deadline, speculative)
+            if tel is not None:
+                m_dispatched.inc(len(nids))
+                g_running.add(len(nids))
+                g_slots.set(self.slots - len(free))
+                g_ready.set(len(ready))
+                label = (nids[0] if len(nids) == 1
+                         else f"{nodes[0].task} x{len(nids)}")
+                tel.trace.begin(
+                    f"slot{slot}", label, now, cat="dispatch",
+                    args={"tasks": len(nids), "speculative": speculative,
+                          "attempt": attempts.get(nids[0], 0)})
             if deadline is not None:
                 heapq.heappush(deadline_heap, (deadline, token))
                 # lazy-invalidated entries can pile up below a long-lived
@@ -748,9 +795,19 @@ class Scheduler:
                     # deterministic sub-millisecond failure must not
                     # burn its whole retry budget in one loop iteration
                     delay = policy.delay(n_attempt, key=nid)
+                    if tel is not None:
+                        tel.metrics.counter(
+                            "papas_retries_total",
+                            kind=classify_failure(error)).inc()
                     if delay > 0.0:
-                        heapq.heappush(retry_heap,
-                                       (self.clock() + delay, nid))
+                        now_r = self.clock()
+                        heapq.heappush(retry_heap, (now_r + delay, nid))
+                        if tel is not None:
+                            g_retrying.add(1)
+                            tel.trace.async_begin(
+                                "retry-wait", nid, f"{nid}#{n_attempt}",
+                                now_r, args={"delay": delay,
+                                             "attempt": n_attempt})
                     else:
                         bisect.insort(ready, nid, key=self._order_key)
                     return
@@ -771,6 +828,8 @@ class Scheduler:
                     host=host))
 
         def _expire(d: _Dispatch, now: float) -> None:
+            if tel is not None:
+                m_expired.inc()
             _abandon(d.token)
             limit = (d.deadline or now) - d.dispatched
             for nid in d.nids:
@@ -800,6 +859,11 @@ class Scheduler:
                 now = self.clock()
                 while retry_heap and retry_heap[0][0] <= now:
                     _, rnid = heapq.heappop(retry_heap)
+                    if tel is not None:
+                        g_retrying.add(-1)
+                        tel.trace.async_end(
+                            "retry-wait", rnid,
+                            f"{rnid}#{attempts.get(rnid, 0)}", now)
                     if rnid not in resolved_ids:
                         bisect.insort(ready, rnid, key=self._order_key)
             if exhausted and not pending and n_resolved >= expected:
@@ -914,10 +978,29 @@ class Scheduler:
                 continue
             d = running.pop(ev.token)
             heapq.heappush(free, d.slot)
+            if tel is not None:
+                g_running.add(-len(d.nids))
+                g_slots.set(self.slots - len(free))
+                tel.trace.end(f"slot{d.slot}", self.clock(), cat="dispatch",
+                              args={"host": ev.host or ""})
             for nid, value, error in zip(d.nids, ev.values, ev.errors):
                 _handle_outcome(d, nid, value, error, ev.started, ev.finished,
                                 host=ev.host)
 
+        if tel is not None:
+            # close any slices a breakout left open (deadlock skip with
+            # dispatches still in flight) so every B has its E
+            now = self.clock()
+            for d in running.values():
+                tel.trace.end(f"slot{d.slot}", now, cat="dispatch",
+                              args={"outcome": "unresolved"})
+            for _, rnid in retry_heap:
+                # stale backoff entries (node resolved by a duplicate)
+                tel.trace.async_end("retry-wait", rnid,
+                                    f"{rnid}#{attempts.get(rnid, 0)}", now)
+            g_running.set(0)
+            g_slots.set(0)
+            g_ready.set(0)
         return results
 
     # ------------------------------------------------------------------

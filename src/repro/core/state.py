@@ -155,6 +155,10 @@ class StudyJournal:
         with self._lock:
             self._writer.flush()
 
+    def shard_counters(self) -> list[dict[str, Any]]:
+        """Per-segment group-commit counters (telemetry snapshot)."""
+        return self._writer.shard_counters()
+
     def close(self) -> None:
         """Flush and release the long-lived log handle."""
         with self._lock:

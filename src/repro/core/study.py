@@ -35,6 +35,7 @@ from pathlib import Path
 from typing import Any, Callable, Iterator, Mapping, Sequence
 
 from . import chaos as chaos_mod
+from . import telemetry as telemetry_mod
 from .interpolate import compile_environ, compile_template
 from .dag import TaskDAG, TaskNode
 from .executors import (
@@ -377,6 +378,41 @@ class ParameterStudy:
             return chaos_mod.FaultPlan.from_dict(chaos).controller()
         return chaos_mod.FaultPlan.load(chaos).controller()
 
+    # -- telemetry -------------------------------------------------------
+    @staticmethod
+    def _resolve_trace(trace: Any) -> Any:
+        """Normalize ``run(trace=…)`` to a live ``Telemetry`` (or None):
+        accepts a ``Telemetry``, ``True`` (fresh collector, default
+        ``trace.json`` location), a path for the trace file, or
+        ``False`` to force-disarm.  ``None`` falls through to whatever
+        is already armed process-wide (``PAPAS_TRACE`` / ``install``)."""
+        if trace is None:
+            return telemetry_mod.current()
+        if trace is False:
+            return None
+        if isinstance(trace, telemetry_mod.Telemetry):
+            return trace
+        if trace is True:
+            return telemetry_mod.Telemetry()
+        return telemetry_mod.Telemetry(path=trace)
+
+    def _finalize_telemetry(self, tel: Any) -> None:
+        """Persist the armed run's observability artifacts: the Chrome
+        trace next to the provenance files and the metrics snapshot —
+        including per-shard group-commit counters, captured *before*
+        post-run compaction folds the segments — into ``study.json``."""
+        snapshot = tel.metrics.snapshot()
+        snapshot["groupcommit_shards"] = {
+            "journal": self.journal.shard_counters(),
+            "records": self.db.shard_counters(),
+        }
+        trace_path = Path(tel.path) if tel.path else self.db.dir / "trace.json"
+        tel.trace.write(trace_path)
+        meta = self.db.read_meta()
+        meta["telemetry"] = snapshot
+        meta["trace"] = str(trace_path)
+        self.db.write_meta(meta)
+
     def _finalize_run_health(self, worker: Any, ctrl: Any
                              ) -> dict[str, Any]:
         """Post-run health verdict (graceful degradation): a run that
@@ -520,6 +556,7 @@ class ParameterStudy:
         straggler_quantile: float | None = None,
         retry: Any = None,
         chaos: Any = None,
+        trace: Any = None,
     ) -> dict[str, TaskResult]:
         """Execute the study through the unified event engine.
 
@@ -586,6 +623,14 @@ class ParameterStudy:
         live ``ChaosController``); the run then completes *degraded*
         rather than dying when hosts are permanently lost, with the
         fault ledger and per-host causes attached to ``study.json``.
+
+        ``trace`` arms the telemetry layer for the run (``True``, a
+        ``telemetry.Telemetry``, or a path for the Chrome-trace JSON;
+        ``False`` force-disarms, ``None`` defers to ``PAPAS_TRACE``):
+        the scheduler, pools, and group-commit writers emit lifecycle
+        spans and metrics, ``trace.json`` lands in the study directory
+        (Perfetto/``chrome://tracing`` loadable), and the metrics
+        snapshot is attached to ``study.json`` under ``telemetry``.
         """
         if isinstance(window, str) and window != "auto":
             raise ValueError(
@@ -602,8 +647,9 @@ class ParameterStudy:
                 on_result=on_result, keep_results=keep_results,
                 aggregator=aggregator,
                 straggler_quantile=straggler_quantile,
-                retry=retry, chaos=chaos)
+                retry=retry, chaos=chaos, trace=trace)
         ctrl = self._resolve_chaos(chaos)
+        tel = self._resolve_trace(trace)
         instances = self.instances()
         completed: set[str] = set()
         if resume and self.journal.exists():
@@ -635,11 +681,16 @@ class ParameterStudy:
         self.journal.save(instances, completed, {"name": self.name},
                           hosts=host_map)
 
-        # arm chaos for the backend's whole lifetime — lane pools
-        # capture the controller at construction, transports consult it
+        # arm chaos + telemetry for the backend's whole lifetime — lane
+        # pools capture both at construction, transports consult chaos
         # per dispatch — restoring whatever was armed before
         _prev_chaos = chaos_mod.current()
         chaos_mod.install(ctrl)
+        _prev_tel = telemetry_mod.current()
+        telemetry_mod.install(tel)
+        if tel is not None:
+            tel.begin_run(total=max(0, len(dag.nodes) - len(completed)),
+                          slots=slots)
         worker: WorkerPool | None = None
         owned = False
         try:
@@ -679,6 +730,8 @@ class ParameterStudy:
             # whole group)
             slots = max(slots,
                         getattr(worker, "dispatch_slots", slots) or slots)
+            if tel is not None:
+                tel.slots = max(1, slots)   # post-lift: the ETA divisor
             sched = Scheduler(slots=slots, max_retries=max_retries,
                               speculate=speculate,
                               straggler_quantile=straggler_quantile,
@@ -705,12 +758,15 @@ class ParameterStudy:
                                         classify=capture_classify)
         finally:
             chaos_mod.install(_prev_chaos)
+            telemetry_mod.install(_prev_tel)
             self.journal.set_pre_flush(None)
             if owned and worker is not None:
                 worker.shutdown()
         # compact the journal: fold the append log back into the base
         self.journal.save(instances, completed, {"name": self.name},
                           hosts=host_map)
+        if tel is not None:
+            self._finalize_telemetry(tel)
         self.journal.set_shards(1)
         self.db.set_shards(1)
         self.last_run_stats = {
@@ -741,9 +797,11 @@ class ParameterStudy:
         straggler_quantile: float | None = None,
         retry: Any = None,
         chaos: Any = None,
+        trace: Any = None,
     ) -> dict[str, TaskResult]:
         """Streaming execution: windowed admission + journal v2."""
         ctrl = self._resolve_chaos(chaos)
+        tel = self._resolve_trace(trace)
         space = self.space()
         shash = space.space_hash()
         n_instances = space.sample_count()
@@ -788,9 +846,18 @@ class ParameterStudy:
         dag = TaskDAG()
         run_fn = runner or self._default_runner
 
-        # see the eager path: arm chaos for the backend's lifetime
+        # see the eager path: arm chaos + telemetry for the backend's
+        # lifetime
         _prev_chaos = chaos_mod.current()
         chaos_mod.install(ctrl)
+        _prev_tel = telemetry_mod.current()
+        telemetry_mod.install(tel)
+        if tel is not None:
+            done_nodes = sum(len(v) for v in completed_idx.values())
+            tel.begin_run(
+                total=max(0, n_instances * len(self.spec.tasks)
+                          - done_nodes),
+                slots=slots)
         worker: WorkerPool | None = None
         owned = False
         try:
@@ -831,6 +898,8 @@ class ParameterStudy:
 
             slots = max(slots,
                         getattr(worker, "dispatch_slots", slots) or slots)
+            if tel is not None:
+                tel.slots = max(1, slots)   # post-lift: the ETA divisor
             # "auto": size the admission window from the observed
             # completion rate (~half a second of throughput), floored
             # at the slot count
@@ -858,12 +927,15 @@ class ParameterStudy:
                                         classify=capture_classify)
         finally:
             chaos_mod.install(_prev_chaos)
+            telemetry_mod.install(_prev_tel)
             self.journal.set_pre_flush(None)
             if owned and worker is not None:
                 worker.shutdown()
         # compact: fold the append log back into a fresh v2 base
         self.journal.save_indexed(shash, n_instances, completed_idx,
                                   {"name": self.name}, hosts=host_map)
+        if tel is not None:
+            self._finalize_telemetry(tel)
         self.journal.set_shards(1)
         self.db.set_shards(1)
         self.last_run_stats = {

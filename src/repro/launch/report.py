@@ -20,6 +20,13 @@ Three report shapes, each printable as Markdown (default), CSV, or JSON:
   efficiency of a timing metric relative to the declared baseline point
   (``--baseline threads=1``; ``repro.launch.sweep --report`` defaults it
   from the WDL ``baseline:`` keyword), pivoted the same way.
+* ``runtime`` — where the wall-clock went: one row per task (or per
+  host with ``--group-by host``) with count/total/min/median/max over
+  the ok records, plus a ``chaos_events`` column counting fault-ledger
+  entries that targeted the group — a DEGRADED run shows where faults
+  landed next to where time went.  Needs no ``--group-by`` and no
+  ``capture:`` metrics; it surfaces ``StudyDB.runtime_summary()``
+  (live) or rebuilds the same summary offline from ``records.jsonl``.
 
 Group-by keys name parameters (short forms resolve like WDL
 interpolation: ``size`` matches ``args:size``) or captured metrics
@@ -45,7 +52,7 @@ from repro.core.results import (
     STATS, KeyResolutionError, ResultsAggregator, infer_scalar,
 )
 
-REPORTS = ("summary", "table", "speedup")
+REPORTS = ("summary", "table", "speedup", "runtime")
 FORMATS = ("md", "csv", "json")
 
 
@@ -255,6 +262,71 @@ def speedup_report(agg: ResultsAggregator, metric: str,
     return "\n\n".join(sections)
 
 
+def _offline_runtime_summary(path: "str | Path",
+                             by: str) -> dict[str, dict[str, Any]]:
+    """Rebuild ``StudyDB.runtime_summary(by=...)`` from the on-disk
+    record stream: latest ``ok`` record per task id wins, so resumed
+    or retried studies count each instance exactly once."""
+    latest: dict[str, dict[str, Any]] = {}
+    for r in iter_records(path):
+        if r.get("status") == "ok":
+            latest[r["task_id"]] = r
+    groups: dict[str, list[float]] = {}
+    for r in latest.values():
+        key = (r["task_id"].partition("@")[0] if by == "task"
+               else str(r.get("host") or "local"))
+        groups.setdefault(key, []).append(float(r.get("runtime") or 0.0))
+    out: dict[str, dict[str, Any]] = {}
+    for key, times in sorted(groups.items()):
+        times.sort()
+        out[key] = {"count": len(times), "total": sum(times),
+                    "min": times[0], "median": times[len(times) // 2],
+                    "max": times[-1]}
+    return out
+
+
+def _fault_counts(path: "str | Path", by: str) -> dict[str, int]:
+    """Fault-ledger entries per group key, from ``study.json`` — the
+    runtime table's ``chaos_events`` column (0 everywhere on a run
+    without an armed chaos controller)."""
+    p = Path(path)
+    meta_path = (p if p.is_dir() else p.parent) / "study.json"
+    if not meta_path.exists():
+        return {}
+    try:
+        meta = json.loads(meta_path.read_text())
+    except ValueError:
+        return {}
+    counts: dict[str, int] = {}
+    for f in meta.get("fault_ledger") or []:
+        target = str(f.get("target") or "")
+        key = target.partition("@")[0] if by == "task" else target
+        counts[key] = counts.get(key, 0) + 1
+    return counts
+
+
+def runtime_report(source: Any, by: str = "task", fmt: str = "md") -> str:
+    """Per-task / per-host runtime table.  ``source`` is a ``StudyDB``
+    (live — uses its ``runtime_summary``) or a study directory /
+    ``records.jsonl`` path (offline rebuild of the same summary)."""
+    if by not in ("task", "host"):
+        raise ValueError(
+            f"runtime report groups by 'task' or 'host', got {by!r}")
+    if hasattr(source, "runtime_summary"):
+        summary = source.runtime_summary(by=by)
+        where: Any = source.dir
+    else:
+        summary = _offline_runtime_summary(source, by)
+        where = source
+    faults = _fault_counts(where, by)
+    headers = [by, "count", "total", "min", "median", "max",
+               "chaos_events"]
+    rows = [[key, s.get("count"), s.get("total"), s.get("min"),
+             s.get("median"), s.get("max"), faults.get(key, 0)]
+            for key, s in summary.items()]
+    return render_rows(headers, rows, fmt)
+
+
 def run_report(agg: ResultsAggregator, report: str, metric: str,
                stat: str = "mean",
                baseline: Mapping[str, Any] | None = None,
@@ -271,6 +343,9 @@ def run_report(agg: ResultsAggregator, report: str, metric: str,
                 "speedup report needs a baseline (--baseline key=value, "
                 "or a WDL 'baseline:' declaration when run via sweep)")
         return speedup_report(agg, metric, baseline, stat, fmt)
+    if report == "runtime":
+        raise ValueError("runtime report reads provenance directly — "
+                         "call runtime_report(study_dir_or_db, by, fmt)")
     raise ValueError(f"unknown report {report!r} (valid: {REPORTS})")
 
 
@@ -280,10 +355,12 @@ def main(argv: Sequence[str] | None = None) -> int:
                     "(records.jsonl)")
     ap.add_argument("path",
                     help="study directory or records.jsonl path")
-    ap.add_argument("--group-by", required=True,
+    ap.add_argument("--group-by", default=None,
                     help="comma-separated group keys (parameters or "
                          "captured metrics; short names resolve like WDL "
-                         "interpolation)")
+                         "interpolation).  Required for every report "
+                         "except runtime, where it picks the table axis "
+                         "('task', the default, or 'host')")
     ap.add_argument("--report", choices=REPORTS, default="summary")
     ap.add_argument("--metric", default="time",
                     help="captured metric to aggregate (default: time)")
@@ -295,6 +372,21 @@ def main(argv: Sequence[str] | None = None) -> int:
                          "key=value (e.g. threads=1)")
     ap.add_argument("--format", choices=FORMATS, default="md")
     args = ap.parse_args(argv)
+
+    if args.report == "runtime":
+        try:
+            out = runtime_report(args.path, args.group_by or "task",
+                                 args.format)
+        except (FileNotFoundError, ValueError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        banner = degraded_banner(args.path)
+        if banner:
+            print(banner, file=sys.stderr)
+        print(out)
+        return 0
+    if not args.group_by:
+        ap.error(f"--group-by is required for --report {args.report}")
 
     group_by = [k.strip() for k in args.group_by.split(",") if k.strip()]
     try:

@@ -51,7 +51,8 @@ import jax
 from repro.configs import get_smoke
 from repro.core import (
     GangExecutor, LocalSubmitter, LocalTransport, ResultsAggregator,
-    SchedulerSubmitter, SSHTransport, WDLError, load_study, stackable_key,
+    SchedulerSubmitter, SSHTransport, Telemetry, WDLError, load_study,
+    stackable_key,
 )
 from repro.launch import report as report_mod
 from repro.train.ensemble import train_ensemble
@@ -123,7 +124,10 @@ def main() -> None:
                     help="aggregate captured metrics while the study "
                          "streams and print this pivot table at the end "
                          "(requires --group-by; implies keep_results=False "
-                         "— O(groups) memory)")
+                         "— O(groups) memory).  'runtime' instead prints "
+                         "the per-task (or per-host, --group-by host) "
+                         "runtime table from provenance — no captures "
+                         "needed")
     ap.add_argument("--group-by", default=None,
                     help="comma-separated group keys for --report: "
                          "parameters or captured metrics (short names "
@@ -145,6 +149,24 @@ def main() -> None:
                          "fire by plan, the run degrades gracefully "
                          "instead of dying, and study.json carries the "
                          "fault ledger")
+    ap.add_argument("--trace", nargs="?", const=True, default=None,
+                    metavar="PATH",
+                    help="arm the telemetry layer (repro.core.telemetry) "
+                         "and write a Chrome-trace-event JSON of the run "
+                         "— task-lifecycle spans per slot/lane/host, "
+                         "retry waits, chaos firings — loadable in "
+                         "https://ui.perfetto.dev (default path: "
+                         "<study dir>/trace.json)")
+    ap.add_argument("--status", action="store_true",
+                    help="live in-place progress line on stderr: "
+                         "done/running/failed/retrying, tasks/s, and an "
+                         "ETA from the streaming median runtime "
+                         "(implies telemetry arming)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="N",
+                    help="serve Prometheus text /metrics and JSON "
+                         "/status from a daemon thread on 127.0.0.1:N "
+                         "while the study runs (0 picks a free port; "
+                         "implies telemetry arming)")
     ap.add_argument("--check", action="store_true",
                     help="pre-flight static analysis (repro.core.lint) "
                          "before admitting the run: print findings and "
@@ -173,7 +195,12 @@ def main() -> None:
             sys.exit(1)
 
     aggregator = None
-    if args.report is not None:
+    if args.report == "runtime":
+        # runtime tables come straight from provenance — no capture
+        # aggregation; --group-by (optional) picks the task/host axis
+        if args.group_by not in (None, "task", "host"):
+            ap.error("--report runtime groups by 'task' or 'host'")
+    elif args.report is not None:
         if not args.group_by:
             ap.error("--report requires --group-by")
         aggregator = ResultsAggregator(
@@ -213,6 +240,29 @@ def main() -> None:
     if args.chaos is not None:
         extra_kwargs["chaos"] = args.chaos
 
+    # telemetry: one instance owns the trace, metrics, status line, and
+    # (optionally) the HTTP endpoint; the study arms it for the run and
+    # snapshots metrics into study.json, sweep owns its lifetime
+    tel = None
+    if (args.trace is not None or args.status
+            or args.metrics_port is not None):
+        tel = Telemetry(path=None if args.trace in (None, True)
+                        else args.trace)
+        extra_kwargs["trace"] = tel
+        if args.metrics_port is not None:
+            port = tel.serve(args.metrics_port)
+            print(f"[telemetry] http://127.0.0.1:{port}/metrics "
+                  f"(Prometheus text) and /status (JSON)")
+        if args.status:
+            tel.attach_status()
+            _prev_cb = extra_kwargs.get("on_result")
+
+            def _tick(res, _prev=_prev_cb, _tel=tel):
+                if _prev is not None:
+                    _prev(res)
+                _tel.tick()
+            extra_kwargs["on_result"] = _tick
+
     if args.gang:
         def gang_runner(nodes):
             members = [dict(n.combo) for n in nodes]
@@ -245,6 +295,15 @@ def main() -> None:
         except ValueError as e:
             ap.error(str(e))    # e.g. unknown --pool kind, missing hosts
 
+    if tel is not None:
+        if args.status:
+            tel.finish_status()
+        trace_path = (Path(tel.path) if tel.path
+                      else study.db.dir / "trace.json")
+        print(f"[telemetry] trace written to {trace_path} — load it in "
+              f"https://ui.perfetto.dev")
+        tel.close()
+
     if aggregator is not None:
         ok, total = counts["ok"], counts["total"]
     else:
@@ -262,6 +321,12 @@ def main() -> None:
               f"({stats['skipped_complete']} already complete), "
               f"peak live nodes {stats['peak_live_nodes']} "
               f"(bound {stats['slots']} slots + {stats['window']} window)")
+    if args.report == "runtime":
+        # live path: surfaces StudyDB.runtime_summary() directly (the
+        # offline twin reads records.jsonl via repro.launch.report)
+        print(report_mod.runtime_report(study.db, args.group_by or "task",
+                                        args.report_format))
+        return
     if aggregator is not None:
         for key, err in aggregator.key_errors.items():
             print(f"warning: group-by key {key!r}: {err}",

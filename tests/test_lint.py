@@ -175,8 +175,42 @@ class TestCaptures:
                     "  outfiles:\n    log: run.log\n"
                     "  capture:\n    m:\n"
                     "      regex: 'v=(?P<val>[0-9]+)'\n      group: val\n"
-                    "      source: 'outfile:log'\n")
+                    "      source: 'outfile:log'\n"
+                    "      required: true\n")
         assert rep.findings == []
+
+
+class TestDeadCaptures:
+    def test_unconsumed_capture_is_w802(self):
+        rep = _lint("t:\n  command: x\n"
+                    "  capture:\n    m:\n"
+                    "      regex: 'v=([0-9]+)'\n")
+        assert "W802" in _rules(rep)
+        f = next(f for f in rep.findings if f.rule == "W802")
+        assert f.severity == "warn" and f.keyword == "capture.m"
+
+    def test_required_capture_is_not_dead(self):
+        rep = _lint("t:\n  command: x\n"
+                    "  capture:\n    m:\n"
+                    "      regex: 'v=([0-9]+)'\n      required: true\n")
+        assert "W802" not in _rules(rep)
+
+    def test_builtin_capture_is_not_dead(self):
+        # builtins cost nothing to extract — never worth a warning
+        rep = _lint("t:\n  command: x\n"
+                    "  capture:\n    rc: rc\n    duration: duration\n")
+        assert "W802" not in _rules(rep)
+
+    def test_baseline_reference_consumes(self):
+        # the captured metric is a baseline axis in another task: the
+        # report consumes it, so it is not dead
+        rep = _lint("a:\n  command: x\n"
+                    "  capture:\n    gflops:\n"
+                    "      regex: 'g=([0-9]+)'\n"
+                    "b:\n  command: y ${args:size}\n"
+                    "  args:\n    size: [1, 2]\n"
+                    "  baseline:\n    gflops: 1\n")
+        assert "W802" not in _rules(rep)
 
 
 class TestBaseline:
@@ -375,15 +409,15 @@ class TestWDLErrorContext:
         rep = lint_cli.lint_file(FIXTURE)
         e101 = next(f for f in rep.errors if f.rule == "E101")
         assert e101.file == str(FIXTURE)
-        assert e101.line == 16    # the prep command line
+        assert e101.line == 18    # the prep command line
         assert e101.keyword_path == "prep.command"
 
 
 class TestFixtureAndExamples:
     def test_broken_fixture_trips_every_seeded_rule(self):
         rep = lint_cli.lint_file(FIXTURE)
-        assert _rules(rep) == {"E101", "E201", "E202", "E203",
-                               "E301", "E403", "E502", "W601", "W701"}
+        assert _rules(rep) == {"E101", "E201", "E202", "E203", "E301",
+                               "E403", "E502", "W601", "W701", "W802"}
         assert not rep.ok
 
     def test_shipped_examples_lint_clean(self):

@@ -1,0 +1,420 @@
+"""Telemetry layer: metrics-registry semantics, Chrome-trace schema
+validity (every ``B`` closed, stable tids across lane respawns), exact
+retry-backoff span timings under VirtualClock, counters checked
+against scheduler ground truth on a seeded chaos run, live status, and
+the ``/metrics`` + ``/status`` HTTP surface."""
+import io
+import json
+import urllib.error
+import urllib.request
+from pathlib import Path
+
+import pytest
+
+from repro.core import (
+    ParameterStudy, Scheduler, TaskDAG, TaskNode, Telemetry, VirtualClock,
+    VirtualPool, parse_yaml,
+)
+from repro.core import telemetry
+from repro.core.chaos import FaultEvent, FaultPlan
+from repro.core.telemetry import MetricsRegistry, TraceCollector
+
+
+def assert_trace_wellformed(events):
+    """Chrome-trace ``B``/``E`` stack discipline: per tid, every begin
+    is closed by a matching end and depth never goes negative."""
+    depth: dict[int, int] = {}
+    for ev in events:
+        ph = ev["ph"]
+        if ph == "M":
+            continue
+        assert ev["pid"] == TraceCollector.PID
+        tid = ev["tid"]
+        if ph == "B":
+            depth[tid] = depth.get(tid, 0) + 1
+        elif ph == "E":
+            depth[tid] = depth.get(tid, 0) - 1
+            assert depth[tid] >= 0, f"E without open B on tid {tid}"
+    leaks = {t: d for t, d in depth.items() if d}
+    assert not leaks, f"unclosed B spans: {leaks}"
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+class TestMetricsRegistry:
+    def test_counter_gauge_histogram(self):
+        reg = MetricsRegistry()
+        c = reg.counter("papas_x_total")
+        c.inc()
+        c.inc(2)
+        assert reg.value("papas_x_total") == 3
+        g = reg.gauge("papas_busy")
+        g.set(5)
+        g.add(-2)
+        assert reg.value("papas_busy") == 3
+        h = reg.histogram("papas_runtime")
+        for v in (1.0, 2.0, 3.0):
+            h.observe(v)
+        snap = reg.value("papas_runtime")
+        assert snap["count"] == 3 and snap["sum"] == 6.0
+        assert snap["min"] == 1.0 and snap["max"] == 3.0
+        assert 1.0 <= snap["p50"] <= 3.0
+
+    def test_labels_families_and_handles(self):
+        reg = MetricsRegistry()
+        a = reg.counter("papas_retries_total", kind="error")
+        b = reg.counter("papas_retries_total", kind="timeout")
+        a.inc()
+        a.inc()
+        b.inc()
+        # same (name, labels) → the same handle, not a new series
+        assert reg.counter("papas_retries_total", kind="error") is a
+        assert reg.value("papas_retries_total", kind="error") == 2
+        assert reg.sum_values("papas_retries_total") == 3
+        # an untouched series reads as 0 (status math before any event)
+        assert reg.value("papas_nope_total") == 0
+
+    def test_type_conflict_rejected(self):
+        reg = MetricsRegistry()
+        reg.counter("papas_m")
+        with pytest.raises(TypeError, match="already registered"):
+            reg.gauge("papas_m")
+
+    def test_snapshot_is_json_serializable(self):
+        reg = MetricsRegistry()
+        reg.counter("papas_c_total").inc(4)
+        reg.histogram("papas_h").observe(0.5)
+        snap = reg.snapshot()
+        doc = json.loads(json.dumps(snap))
+        assert doc["papas_c_total"] == 4
+        assert doc["papas_h"]["count"] == 1
+
+    def test_prometheus_exposition(self):
+        reg = MetricsRegistry()
+        reg.counter("papas_tasks_completed_total").inc(7)
+        reg.counter("papas_retries_total", kind="error").inc()
+        reg.histogram("papas_task_runtime_seconds").observe(0.5)
+        text = reg.prometheus()
+        assert "# TYPE papas_tasks_completed_total counter" in text
+        assert "papas_tasks_completed_total 7" in text
+        assert 'papas_retries_total{kind="error"} 1' in text
+        # histograms render as summaries with quantile labels
+        assert "# TYPE papas_task_runtime_seconds summary" in text
+        assert 'papas_task_runtime_seconds{quantile="0.5"} 0.5' in text
+        assert "papas_task_runtime_seconds_count 1" in text
+        assert "papas_task_runtime_seconds_sum 0.5" in text
+
+
+# ---------------------------------------------------------------------------
+# trace collector
+# ---------------------------------------------------------------------------
+
+class TestTraceCollector:
+    def test_schema_and_stable_tids(self):
+        tr = TraceCollector()
+        tr.begin("lane0", "t1", 1.0)
+        tr.end("lane0", 2.0)
+        tr.begin("lane1", "t2", 1.5)
+        tr.end("lane1", 2.5)
+        tr.begin("lane0", "t3", 3.0)    # same track name → same tid
+        tr.end("lane0", 4.0)
+        evs = tr.events()
+        assert_trace_wellformed(evs)
+        meta = [e for e in evs if e["ph"] == "M"]
+        # exactly one thread_name metadata record per track, ever
+        assert sorted(e["args"]["name"] for e in meta) == ["lane0", "lane1"]
+        tids = {e["args"]["name"]: e["tid"] for e in meta}
+        lane0 = [e for e in evs if e["ph"] == "B"
+                 and e["tid"] == tids["lane0"]]
+        assert [e["name"] for e in lane0] == ["t1", "t3"]
+        # timestamps are seconds scaled to trace microseconds
+        assert lane0[0]["ts"] == 1.0 * 1e6
+
+    def test_async_and_instant_events(self):
+        tr = TraceCollector()
+        tr.async_begin("retry-wait", "n", "n#1", 1.0, args={"delay": 2.0})
+        tr.async_end("retry-wait", "n", "n#1", 3.0)
+        tr.instant("chaos", "kill_lane", 2.0, args={"lane": 0})
+        evs = tr.events()
+        b = next(e for e in evs if e["ph"] == "b")
+        e = next(ev for ev in evs if ev["ph"] == "e")
+        assert b["id"] == e["id"] == "n#1"
+        assert b["args"]["delay"] == 2.0
+        i = next(ev for ev in evs if ev["ph"] == "i")
+        assert i["s"] == "t" and i["name"] == "kill_lane"
+
+    def test_write_perfetto_document(self, tmp_path):
+        tr = TraceCollector()
+        tr.complete("slot0", "t", 0.0, 1.0, cat="dispatch")
+        out = tr.write(tmp_path / "trace.json")
+        doc = json.loads(Path(out).read_text())
+        assert doc["displayTimeUnit"] == "ms"
+        assert_trace_wellformed(doc["traceEvents"])
+        assert any(e["ph"] == "B" for e in doc["traceEvents"])
+
+
+# ---------------------------------------------------------------------------
+# arming seam
+# ---------------------------------------------------------------------------
+
+class TestArming:
+    def test_disarmed_by_default(self, monkeypatch):
+        monkeypatch.delenv("PAPAS_TRACE", raising=False)
+        monkeypatch.setattr(telemetry, "_controller", None)
+        monkeypatch.setattr(telemetry, "_env_checked", False)
+        assert telemetry.current() is None
+
+    def test_env_arming_with_path(self, monkeypatch):
+        monkeypatch.setattr(telemetry, "_controller", None)
+        monkeypatch.setattr(telemetry, "_env_checked", False)
+        monkeypatch.setenv("PAPAS_TRACE", "/tmp/papas_env/trace.json")
+        tel = telemetry.current()
+        assert tel is not None
+        assert tel.path == "/tmp/papas_env/trace.json"
+
+    def test_env_arming_boolean(self, monkeypatch):
+        monkeypatch.setattr(telemetry, "_controller", None)
+        monkeypatch.setattr(telemetry, "_env_checked", False)
+        monkeypatch.setenv("PAPAS_TRACE", "1")
+        tel = telemetry.current()
+        assert tel is not None and tel.path is None
+
+    def test_activated_restores_previous(self):
+        prev = telemetry.current()
+        tel = Telemetry()
+        with telemetry.activated(tel):
+            assert telemetry.current() is tel
+        assert telemetry.current() is prev
+
+
+# ---------------------------------------------------------------------------
+# scheduler spans under VirtualClock: exact retry-backoff timings
+# ---------------------------------------------------------------------------
+
+class TestRetrySpans:
+    def test_backoff_span_duration_is_exact(self):
+        clock = VirtualClock()
+        attempts = {"n": 0}
+
+        def flaky(node):
+            attempts["n"] += 1
+            if attempts["n"] == 1:
+                raise RuntimeError("transient")
+            return "ok"
+
+        tel = Telemetry()
+        with telemetry.activated(tel):
+            pool = VirtualPool({"t": 1.0}, clock, call_runner=True)
+            sched = Scheduler(slots=1, clock=clock, max_retries=2,
+                              retry_policy={"base": 2.0,
+                                            "backoff": "fixed"})
+            dag = TaskDAG()
+            dag.add(TaskNode(id="t", task="t", combo={}, payload={}))
+            results = sched.execute(dag, flaky, pool=pool)
+            pool.shutdown()
+        assert results["t"].status == "ok" and results["t"].attempts == 2
+
+        evs = tel.trace.events()
+        assert_trace_wellformed(evs)
+        # the backoff wait is an async slice keyed by node#attempt; the
+        # virtual clock jumps to the due time, so its duration is the
+        # configured delay exactly (in trace microseconds)
+        b = next(e for e in evs if e["ph"] == "b")
+        e = next(ev for ev in evs if ev["ph"] == "e")
+        assert b["id"] == e["id"] == "t#1"
+        assert b["args"]["delay"] == 2.0
+        assert e["ts"] - b["ts"] == pytest.approx(2.0 * 1e6)
+        # both attempts are dispatch slices on the slot track, closed,
+        # with the attempt number recorded at begin time
+        disp = [ev for ev in evs
+                if ev["ph"] == "B" and ev["cat"] == "dispatch"]
+        assert [d["args"]["attempt"] for d in disp] == [1, 2]
+        # the retrying gauge drained back to zero at re-queue
+        assert tel.metrics.value("papas_tasks_retrying") == 0
+        assert tel.metrics.sum_values("papas_retries_total") == 1
+
+
+# ---------------------------------------------------------------------------
+# counters vs scheduler ground truth
+# ---------------------------------------------------------------------------
+
+class TestCountersGroundTruth:
+    def test_counters_match_results(self):
+        clock = VirtualClock()
+        calls: dict[str, int] = {}
+
+        def runner(node):
+            n = calls[node.id] = calls.get(node.id, 0) + 1
+            if node.id == "flaky" and n == 1:
+                raise RuntimeError("transient")
+            if node.id == "doomed":
+                raise RuntimeError("permanent")
+            return node.id
+
+        tel = Telemetry()
+        with telemetry.activated(tel):
+            pool = VirtualPool(lambda nid, k: 1.0, clock, call_runner=True)
+            sched = Scheduler(slots=2, clock=clock, max_retries=2,
+                              retry_policy={"base": 0.01})
+            dag = TaskDAG()
+            for nid in ("ok1", "ok2", "flaky", "doomed"):
+                dag.add(TaskNode(id=nid, task=nid, combo={}, payload={}))
+            dag.add(TaskNode(id="child", task="child", combo={},
+                             deps=["doomed"], payload={}))
+            results = sched.execute(dag, runner, pool=pool)
+            pool.shutdown()
+
+        by_status = {"ok": 0, "failed": 0, "skipped": 0}
+        for r in results.values():
+            by_status[r.status] += 1
+        assert by_status == {"ok": 3, "failed": 1, "skipped": 1}
+
+        m = tel.metrics
+        assert m.value("papas_tasks_completed_total") == by_status["ok"]
+        assert m.value("papas_tasks_failed_total") == by_status["failed"]
+        assert m.value("papas_tasks_skipped_total") == by_status["skipped"]
+        # every scheduled retry shows up in the labeled retry family
+        retries = sum(max(0, r.attempts - 1) for r in results.values())
+        assert retries == 3     # flaky ×1, doomed ×2
+        assert m.sum_values("papas_retries_total") == retries
+        assert m.value("papas_retries_total", kind="error") == retries
+        # dispatches = attempts actually launched (skipped never ran)
+        dispatched = sum(r.attempts for r in results.values()
+                         if r.status != "skipped")
+        assert m.value("papas_tasks_dispatched_total") == dispatched
+        # gauges drain back to zero when the loop ends
+        assert m.value("papas_tasks_running") == 0
+        assert m.value("papas_tasks_retrying") == 0
+        # runtime histogram observes ok completions only
+        assert m.value("papas_task_runtime_seconds")["count"] \
+            == by_status["ok"]
+
+
+# ---------------------------------------------------------------------------
+# end to end: a seeded chaos lane study through ParameterStudy.run
+# ---------------------------------------------------------------------------
+
+class TestStudyTrace:
+    def _wdl(self, markers: Path, n: int = 12) -> str:
+        # every instance fails its first attempt (marker-file trick:
+        # `false`, not `exit 1` — the lane shell is persistent), so the
+        # run produces deterministic scheduler-level retries
+        return """
+t:
+  args:
+    i: ["1:%d"]
+  command: "test -e %s/t${args:i} || { : > %s/t${args:i}; false; }"
+""" % (n, markers, markers)
+
+    def test_chaos_lane_trace_and_finalize(self, tmp_path):
+        markers = tmp_path / "markers"
+        markers.mkdir()
+        tel = Telemetry()
+        plan = FaultPlan([FaultEvent("kill_lane", lane=0, after=3)])
+        study = ParameterStudy(parse_yaml(self._wdl(markers)),
+                               root=tmp_path, name="traced")
+        results = study.run(pool="lane", slots=2, trace=tel,
+                            chaos=plan.controller(), max_retries=3,
+                            retry={"base": 0.01})
+        assert all(r.status == "ok" for r in results.values())
+        assert len(results) == 12
+
+        evs = tel.trace.events()
+        assert_trace_wellformed(evs)
+        # one tid per track name even though lane 0 was killed and
+        # respawned mid-run — the logical track survives the OS thread
+        meta = [e for e in evs if e["ph"] == "M"]
+        names = [e["args"]["name"] for e in meta]
+        assert len(names) == len(set(names))
+        tids = {e["args"]["name"]: e["tid"] for e in meta}
+        assert tel.metrics.value("papas_lane_respawns_total") >= 1
+        # the chaos firing is an instant event on the chaos track
+        assert any(e["ph"] == "i" and e["tid"] == tids["chaos"]
+                   for e in evs)
+        assert tel.metrics.sum_values("papas_faults_total") >= 1
+        # dispatch spans cover every instance (retries add more)
+        disp = [e for e in evs
+                if e["ph"] == "B" and e.get("cat") == "dispatch"]
+        assert sum(e["args"]["tasks"] for e in disp) >= len(results)
+        # one retry per instance at minimum (all first attempts fail)
+        assert tel.metrics.sum_values("papas_retries_total") \
+            >= len(results)
+        assert all(r.attempts >= 2 for r in results.values())
+
+        # finalize: metrics snapshot lands in study.json, the trace
+        # next to it, and both agree with the results
+        meta_doc = study.db.read_meta()
+        snap = meta_doc["telemetry"]
+        assert snap["papas_tasks_completed_total"] == len(results)
+        trace_path = Path(meta_doc["trace"])
+        assert trace_path.exists()
+        doc = json.loads(trace_path.read_text())
+        assert doc["traceEvents"] and doc["displayTimeUnit"] == "ms"
+
+    def test_disarmed_run_records_nothing(self, tmp_path):
+        study = ParameterStudy(
+            parse_yaml('t:\n  args:\n    i: ["1:4"]\n  command: "true"\n'),
+            root=tmp_path, name="dark")
+        results = study.run(pool="lane", slots=2)
+        assert all(r.status == "ok" for r in results.values())
+        assert telemetry.current() is None
+        assert "telemetry" not in study.db.read_meta()
+        assert not (study.db.dir / "trace.json").exists()
+
+
+# ---------------------------------------------------------------------------
+# live status + HTTP surface
+# ---------------------------------------------------------------------------
+
+class TestStatusAndHTTP:
+    def test_status_snapshot_and_eta(self):
+        tel = Telemetry()
+        tel.begin_run(total=10, slots=2)
+        m = tel.metrics
+        m.counter("papas_tasks_completed_total").inc(4)
+        for _ in range(4):
+            m.histogram("papas_task_runtime_seconds").observe(2.0)
+        s = tel.status()
+        assert s["total"] == 10 and s["done"] == 4
+        # 6 remaining × 2 s median ÷ 2 slots
+        assert s["eta_s"] == pytest.approx(6.0, abs=0.1)
+        assert "4/10 done" in tel.status_line()
+
+    def test_tick_redraws_in_place(self):
+        tel = Telemetry()
+        tel.begin_run(total=2, slots=1)
+        buf = io.StringIO()
+        tel.attach_status(stream=buf)
+        tel.tick(force=True)
+        tel.metrics.counter("papas_tasks_completed_total").inc(2)
+        tel.finish_status()
+        out = buf.getvalue()
+        # every redraw is carriage-return + full line; the final one
+        # adds the newline that keeps the shell prompt clean
+        assert out.startswith("\r") and out.endswith("\n")
+        assert out.count("\r") == 2 and out.count("\n") == 1
+        # detached: further ticks are no-ops
+        tel.tick(force=True)
+        assert buf.getvalue() == out
+
+    def test_http_metrics_and_status(self):
+        tel = Telemetry()
+        tel.begin_run(total=5, slots=1)
+        tel.metrics.counter("papas_tasks_completed_total").inc(3)
+        port = tel.serve(0)
+        try:
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{port}/metrics", timeout=5) as r:
+                text = r.read().decode()
+            assert "papas_tasks_completed_total 3" in text
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{port}/status", timeout=5) as r:
+                doc = json.loads(r.read().decode())
+            assert doc["done"] == 3 and doc["total"] == 5
+            with pytest.raises(urllib.error.HTTPError):
+                urllib.request.urlopen(
+                    f"http://127.0.0.1:{port}/nope", timeout=5)
+        finally:
+            tel.close()
